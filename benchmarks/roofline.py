@@ -1,0 +1,80 @@
+"""§Roofline aggregator: results/dryrun/*.json → the per-cell terms table.
+
+Reads every dry-run record (written by `repro.launch.dryrun`) and prints the
+three-term roofline per (arch × shape × mesh), the dominant term, MODEL_FLOPS
+/ HLO_FLOPs, and the skip list — i.e. the EXPERIMENTS.md §Roofline source.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import repro.configs as C
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(results_dir: str = RESULTS) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    return (f"{r['arch']:22s} {r['cell']:12s} {r['mesh']:6s} "
+            f"{r['quant']:9s} "
+            f"{r['compute_s']:9.3e} {r['memory_s']:9.3e} "
+            f"{r['collective_s']:9.3e} {r['dominant']:10s} "
+            f"{r['useful_flops_fraction']:6.3f} "
+            f"{r['roofline_fraction']:6.3f}")
+
+
+def lever(r: dict) -> str:
+    """One sentence: what would move this cell's dominant term down."""
+    dom, step = r["dominant"], r["step"]
+    if dom == "memory" and step == "decode":
+        return ("cache bytes dominate → KV-cache int8/int4 "
+                "(kv_quant, §Perf A4) or MLA-style latent caches")
+    if dom == "memory":
+        return ("score/activation HBM traffic → flash-tiled attention "
+                "(kernels/flash_attention) keeps scores in VMEM")
+    if dom == "collective" and step == "train":
+        return ("DP gradient all-reduce floor → bf16 comm (on), grad "
+                "reduce-scatter aligned to ZeRO-1 shards, overlap via "
+                "latency-hiding scheduler")
+    if dom == "collective":
+        return ("sharding-induced gathers → group-aligned quantized "
+                "sharding (§Perf A2) / shard_map-local dispatch (§Perf B2)")
+    if dom == "compute" and r["useful_flops_fraction"] < 0.2:
+        return ("low useful fraction → remove replicated attention "
+                "(q-chunk sharding, §Perf C2) or redundant remat")
+    return "near compute roofline → larger per-chip batch or fuse epilogues"
+
+
+def run(csv_rows: list) -> dict:
+    recs = load_records()
+    hdr = (f"{'arch':22s} {'cell':12s} {'mesh':6s} {'quant':9s} "
+           f"{'compute_s':>9s} {'memory_s':>9s} {'collect_s':>9s} "
+           f"{'dominant':10s} {'useful':>6s} {'rl_frac':>6s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        print(fmt_row(r))
+        print(f"{'':22s} ↳ {lever(r)}")
+        csv_rows.append((
+            f"roofline/{r['arch']}/{r['cell']}/{r['mesh']}/{r['quant']}",
+            f"{r['step_time_s']*1e6:.1f}",
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f}"))
+    # skip list (assignment: note them)
+    for arch in C.list_archs():
+        for cell, why in C.skipped_cells(arch).items():
+            csv_rows.append((f"roofline/{arch}/{cell}", "skipped", why))
+    return {"cells": len(recs)}
+
+
+if __name__ == "__main__":
+    rows = []
+    run(rows)

@@ -1,0 +1,56 @@
+"""End-to-end driver: train a ~100M-param smollm-360m variant with the
+production train loop (checkpointing, failure recovery, straggler
+watchdog) — assignment deliverable (b).
+
+CPU-friendly defaults (60 steps × batch 2 × seq 128 ≈ minutes on one
+core); on real hardware: --steps 300 --batch 64 --seq 1024 --full-depth.
+
+The config is the real smollm-360m trunk at reduced depth so a CPU finishes
+a few hundred steps; pass --full-depth on real hardware. Every substrate on
+the path (data → train_step → AdamW → async checkpoints) is the same code
+the 512-chip dry-run lowers.
+
+Run:  PYTHONPATH=src python examples/train_multiarch.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import repro.configs as configs
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--full-depth", action="store_true")
+    args = ap.parse_args()
+
+    if args.full_depth:
+        cfg = configs.get_config(args.arch)
+    else:
+        # ~100M-param variant: real width, reduced depth (32 → 6 layers):
+        # 6·(4·960² + 3·960·2560)/1e6 ≈ 66M trunk + 47M embed ≈ 113M params
+        cfg = dataclasses.replace(configs.get_config(args.arch),
+                                  num_layers=6, max_seq_len=512)
+    n = cfg.n_params()
+    print(f"[example] {cfg.name}: {n/1e6:.0f}M params, "
+          f"{cfg.num_layers} layers")
+    configs._REGISTRY["_example"] = (lambda: cfg, lambda: cfg)
+    with tempfile.TemporaryDirectory() as d:
+        out = train_main([
+            "--arch", "_example", "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq), "--lr", "1e-3",
+            "--warmup", "10", "--ckpt-dir", d, "--ckpt-every", "100",
+            "--log-every", "25",
+        ])
+    assert out["last_loss"] < out["first_loss"], "training must make progress"
+    print(f"[example] loss {out['first_loss']:.3f} → {out['last_loss']:.3f} "
+          f"over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

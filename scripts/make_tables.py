@@ -1,0 +1,42 @@
+"""Render §Roofline markdown tables from dry-run JSON records."""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    recs = {}
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["cell"], r["mesh"])] = r
+    return recs
+
+
+def table(base_dir="results/dryrun", opt_dir="results/dryrun_v2"):
+    base = load(base_dir)
+    opt = load(opt_dir) if os.path.isdir(opt_dir) else {}
+    hdr = ("| arch | cell | mesh | quant | compute_s | memory_s | "
+           "collective_s | dominant | useful | rl_frac | opt step_s | Δ |")
+    sep = "|" + "---|" * 12
+    print(hdr)
+    print(sep)
+    for key in sorted(base):
+        r = base[key]
+        o = opt.get(key)
+        step_b = r["step_time_s"]
+        if o:
+            imp = step_b / o["step_time_s"] if o["step_time_s"] else 1
+            extra = f"{o['step_time_s']:.3e} | {imp:4.1f}× |"
+        else:
+            extra = "— | — |"
+        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['quant']} | "
+              f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+              f"{r['collective_s']:.3e} | {r['dominant']} | "
+              f"{r['useful_flops_fraction']:.3f} | "
+              f"{r['roofline_fraction']:.3f} | {extra}")
+
+
+if __name__ == "__main__":
+    table(*(sys.argv[1:] or []))

@@ -1,0 +1,2 @@
+"""repro — On-Device Qwen2.5 (AWQ + fused dequant-MAC) as a multi-pod JAX framework."""
+__version__ = "0.1.0"

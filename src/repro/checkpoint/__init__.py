@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,  # noqa: F401
+                                           restore, save)

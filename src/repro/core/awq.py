@@ -1,0 +1,132 @@
+"""Activation-aware Weight Quantization (AWQ) — the paper's software layer.
+
+AWQ (Lin et al., MLSys'24; used directly by the reproduced paper, §III-A)
+observes that ~1% of weight channels are *salient* as measured by the
+magnitude of the **activations** that multiply them, not by the weight values
+themselves. Instead of keeping those channels in FP16 (hardware-unfriendly,
+Fig. 2a of the paper), AWQ applies a per-input-channel scale ``s`` before
+round-to-nearest group quantization:
+
+    W'[k, n] = W[k, n] * s[k]          (weights scaled UP on salient channels)
+    x'[k]    = x[k] / s[k]             (activations scaled DOWN, foldable)
+
+so that the effective quantization error on salient channels shrinks. The
+scale is searched per linear layer over a 1-parameter family
+
+    s = act_mean ** alpha / max(act_mean ** alpha)   (normalized),
+    alpha ∈ [0, 1] on a small grid,
+
+minimizing ``|| X @ W − (X / s) @ Q(W · s) ||²`` on calibration activations
+— exactly the AutoAWQ search the paper runs (they additionally pick
+group_size=64 over the default 128 based on WNLI accuracy).
+
+Hardware note (DESIGN.md §2): the paper folds ``1/s`` into the preceding
+operation on the CPU side. We instead keep an explicit ``input_scale`` vector
+on the quantized linear and apply ``x * inv_s`` at runtime — an O(K) VPU
+multiply that XLA fuses into the surrounding elementwise chain. A fold into
+the preceding RMSNorm gamma is available (``fold_into_norm``) and is used by
+the serving path when the producer is a norm; the numerics are identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantConfig, fake_quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class AWQConfig:
+    """Search hyper-parameters for the activation-aware scale search."""
+
+    quant: QuantConfig = QuantConfig()
+    n_grid: int = 20          # alpha grid resolution (AutoAWQ default)
+    max_calib_rows: int = 512  # activation rows kept per linear for the search
+    duo_scaling: bool = True   # also weigh by 1/w_max like AutoAWQ's v2 search
+    eps: float = 1e-4
+
+
+def activation_scale_candidates(act_mean: jax.Array,
+                                w: jax.Array,
+                                cfg: AWQConfig) -> jax.Array:
+    """All candidate per-channel scales ``[n_grid, K]`` for the alpha grid.
+
+    ``act_mean`` is mean(|x|) per input channel, shape [K]; ``w`` is [K, N].
+    """
+    act = jnp.clip(act_mean.astype(jnp.float32), cfg.eps, None)
+    w_max = jnp.clip(jnp.max(jnp.abs(w), axis=1).astype(jnp.float32), cfg.eps,
+                     None)  # [K]
+    alphas = jnp.arange(cfg.n_grid, dtype=jnp.float32) / cfg.n_grid
+
+    def one(alpha):
+        if cfg.duo_scaling:
+            s = act ** alpha / (w_max ** (1.0 - alpha) + cfg.eps)
+        else:
+            s = act ** alpha
+        s = s / jnp.sqrt(jnp.max(s) * jnp.min(s) + cfg.eps)  # normalize range
+        return jnp.clip(s, cfg.eps, None)
+
+    return jax.vmap(one)(alphas)  # [n_grid, K]
+
+
+def _search_loss(x: jax.Array, w: jax.Array, s: jax.Array,
+                 qcfg: QuantConfig) -> jax.Array:
+    """Reconstruction MSE of the scaled-quantized layer on calibration rows."""
+    w_scaled = w * s[:, None]
+    w_q = fake_quantize(w_scaled, qcfg)
+    y_ref = x @ w
+    y_q = (x / s[None, :]) @ w_q
+    return jnp.mean((y_ref - y_q) ** 2)
+
+
+def search_awq_scale(x_sample: jax.Array, w: jax.Array,
+                     cfg: AWQConfig) -> tuple[jax.Array, jax.Array]:
+    """Grid-search the activation-aware scale for one linear.
+
+    Args:
+      x_sample: calibration activations [rows, K] (float32).
+      w:        weight [K, N].
+    Returns:
+      (best_scale [K] float32, best_loss scalar).
+    """
+    x = x_sample.astype(jnp.float32)
+    if x.shape[0] > cfg.max_calib_rows:
+        x = x[: cfg.max_calib_rows]
+    act_mean = jnp.mean(jnp.abs(x), axis=0)
+    cands = activation_scale_candidates(act_mean, w, cfg)  # [G, K]
+    losses = jax.vmap(lambda s: _search_loss(x, w.astype(jnp.float32), s,
+                                             cfg.quant))(cands)
+    best = jnp.argmin(losses)
+    return cands[best], losses[best]
+
+
+def search_awq_scale_shared(x_samples: Sequence[jax.Array],
+                            ws: Sequence[jax.Array],
+                            cfg: AWQConfig) -> jax.Array:
+    """One shared scale for several linears fed by the same activation.
+
+    AWQ applies a single scale per *producer* (e.g. one scale shared by the
+    q/k/v projections that all read the post-norm hidden state), because the
+    inverse scale is folded once into that producer. Loss = sum over
+    consumers.
+    """
+    x = x_samples[0].astype(jnp.float32)
+    if x.shape[0] > cfg.max_calib_rows:
+        x = x[: cfg.max_calib_rows]
+    act_mean = jnp.mean(jnp.abs(x), axis=0)
+    w_cat = jnp.concatenate([w.astype(jnp.float32) for w in ws], axis=1)
+    cands = activation_scale_candidates(act_mean, w_cat, cfg)
+    losses = jax.vmap(lambda s: _search_loss(x, w_cat, s, cfg.quant))(cands)
+    return cands[jnp.argmin(losses)]
+
+
+def fold_into_norm(norm_gamma: jax.Array, inv_s: jax.Array) -> jax.Array:
+    """Fold the activation inverse-scale into a preceding (RMS/Layer)Norm.
+
+    ``norm(x) * gamma`` feeding ``linear`` becomes ``norm(x) * (gamma*inv_s)``
+    — zero runtime cost, numerically identical to the explicit multiply.
+    """
+    return norm_gamma * inv_s.astype(norm_gamma.dtype)

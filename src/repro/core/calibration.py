@@ -1,0 +1,79 @@
+"""Calibration capture for AWQ — records per-linear input activations.
+
+AWQ needs, per quantized linear, the mean |x| per input channel plus a small
+sample of activation rows (to evaluate the reconstruction loss of each
+candidate scale). The paper runs AutoAWQ offline with a calibration set; here
+the capture is a context manager that model code consults on every linear:
+
+    with CalibrationCapture() as cap:
+        model.apply(params, calib_tokens)      # un-jitted, eager
+    stats = cap.stats                          # {linear_name: LinearStats}
+
+Capture only works **eagerly** (outside jit/scan) because it stores concrete
+values; `transformer.apply` therefore switches its scan-over-layers to a
+python loop whenever `capture_active()` — calibration batches are small, so
+the eager pass is cheap. Names are '@i'-suffixed for scan-stacked layers so
+the PTQ pipeline can address per-layer statistics inside a stacked param.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+_ACTIVE: "CalibrationCapture | None" = None
+
+
+@dataclasses.dataclass
+class LinearStats:
+    """Running activation statistics for one linear layer."""
+
+    sum_abs: np.ndarray   # [K] running sum of |x|
+    count: int            # rows accumulated
+    rows: np.ndarray      # [<=max_rows, K] sampled activation rows
+
+    @property
+    def act_mean(self) -> np.ndarray:
+        return self.sum_abs / max(self.count, 1)
+
+
+class CalibrationCapture:
+    def __init__(self, max_rows: int = 512):
+        self.max_rows = max_rows
+        self.stats: dict[str, LinearStats] = {}
+
+    def record(self, name: str, x) -> None:
+        x = np.asarray(x, dtype=np.float32).reshape(-1, x.shape[-1])
+        st = self.stats.get(name)
+        if st is None:
+            st = LinearStats(sum_abs=np.zeros(x.shape[-1], np.float32),
+                             count=0, rows=x[: self.max_rows].copy())
+            self.stats[name] = st
+        else:
+            room = self.max_rows - st.rows.shape[0]
+            if room > 0:
+                st.rows = np.concatenate([st.rows, x[:room]], axis=0)
+        st.sum_abs += np.abs(x).sum(axis=0)
+        st.count += x.shape[0]
+
+    def __enter__(self):
+        global _ACTIVE
+        if _ACTIVE is not None:
+            raise RuntimeError("nested CalibrationCapture not supported")
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE
+        _ACTIVE = None
+        return False
+
+
+def capture_active() -> bool:
+    return _ACTIVE is not None
+
+
+def record_linear_input(name: str | None, x) -> None:
+    """Called by ``layers.linear`` on every application (no-op when idle)."""
+    if _ACTIVE is not None and name is not None:
+        _ACTIVE.record(name, x)

@@ -1,0 +1,215 @@
+"""Whole-model post-training quantization (PTQ) pipeline.
+
+Mirrors the paper's fully-automated flow (§III-A: "Our approach is fully
+automated, allowing for seamless inference deployment ... with the AutoAWQ
+library, the binary file, and the JSON file"):
+
+    1. run a calibration forward pass under `CalibrationCapture` (eager),
+    2. per linear: AWQ scale search on the captured activations,
+    3. group-quantize the scaled weight, pack into the TPU layout
+       (`PackedLinear`), keep the inverse activation scale,
+    4. (optionally) serialize byte-exact AWQ_MACRO blobs for the
+       compression-rate benchmark.
+
+Model params are nested dicts; linears are sub-dicts ``{"w": [K,N]}`` (plus
+optional ``"b"``). Scan-stacked layers carry leading layer dims
+(``[L, K, N]`` or ``[G, L, K, N]``); capture names address them as
+``blocks@i/...`` segments. Layers without captured stats fall back to plain
+round-to-nearest group quantization (scale = 1), so PTQ of an uncalibrated
+model is still valid — just without the activation-aware protection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.awq import AWQConfig, search_awq_scale
+from repro.core.calibration import LinearStats
+from repro.core.packing import (PackedLinear, pack_linear,
+                                packed_linear_nbytes)
+from repro.core.quantize import QuantConfig, quantize_groupwise
+
+# Param-path substrings never quantized (AWQ convention: embeddings, norms,
+# tiny routers and positional tables stay in high precision).
+DEFAULT_EXCLUDE = ("embed", "norm", "router", "lm_head", "conv", "a_log",
+                   "dt_bias", "ssm_d", "pos_", "scale", "patch_proj")
+
+
+@dataclasses.dataclass
+class PTQReport:
+    """Bookkeeping from one `quantize_params` run."""
+
+    quantized: list[str] = dataclasses.field(default_factory=list)
+    skipped: list[str] = dataclasses.field(default_factory=list)
+    calibrated: list[str] = dataclasses.field(default_factory=list)
+    packed_bytes: int = 0          # byte-exact AWQ_MACRO size of quantized linears
+    dense_bytes_fp16: int = 0      # fp16 size of the same linears
+
+    @property
+    def compression_ratio(self) -> float:
+        if self.dense_bytes_fp16 == 0:
+            return 1.0
+        return self.packed_bytes / self.dense_bytes_fp16
+
+
+def _is_linear(node: Any) -> bool:
+    return (isinstance(node, dict) and "w" in node
+            and hasattr(node["w"], "ndim") and node["w"].ndim >= 2
+            and all(k in ("w", "b") for k in node))
+
+
+def _quantizable(path: str, node: dict, qcfg: QuantConfig,
+                 exclude: tuple[str, ...]) -> bool:
+    w = node["w"]
+    k, n = w.shape[-2], w.shape[-1]
+    if any(e in path.lower() for e in exclude):
+        return False
+    if k % qcfg.group_size or n % 8:
+        return False
+    return k * n >= 16384  # skip tiny projections (paper keeps them on CPU)
+
+
+def _quantize_2d(w: jax.Array, stats: LinearStats | None,
+                 cfg: AWQConfig) -> tuple[jax.Array, jax.Array, jax.Array,
+                                          jax.Array]:
+    """Returns (q, scales, zeros, input_scale[K]) for one [K, N] weight."""
+    k = w.shape[0]
+    if stats is not None and stats.rows.shape[0] >= 8:
+        s, _ = search_awq_scale(jnp.asarray(stats.rows), w, cfg)
+    else:
+        s = jnp.ones((k,), jnp.float32)
+    w_scaled = w.astype(jnp.float32) * s[:, None]
+    q, scales, zeros = quantize_groupwise(w_scaled, cfg.quant)
+    return q, scales, zeros, 1.0 / s
+
+
+def quantize_params(params: Any,
+                    calib: dict[str, LinearStats] | None = None,
+                    cfg: AWQConfig | None = None,
+                    exclude: tuple[str, ...] = DEFAULT_EXCLUDE,
+                    select: Callable[[str], bool] | None = None,
+                    ) -> tuple[Any, PTQReport]:
+    """Replace every quantizable linear in ``params`` with a `PackedLinear`.
+
+    Args:
+      params: nested-dict model params (float).
+      calib:  capture stats from `CalibrationCapture.stats` (or None → RTN).
+      cfg:    AWQ search + quant config (GS=64 INT4 asym by default, §III-A).
+      select: optional extra predicate on the linear's path.
+
+    Returns:
+      (new_params, PTQReport).
+    """
+    cfg = cfg or AWQConfig()
+    calib = calib or {}
+    report = PTQReport()
+
+    def stats_for(path_parts: list[str], idx: tuple[int, ...]) -> LinearStats | None:
+        # Capture-name convention: "<param-path>@<i[,j]>" for stacked layers
+        # (see models/stack.py), plain path otherwise.
+        base = "/".join(path_parts)
+        if not idx:
+            return calib.get(base)
+        return calib.get(f"{base}@{','.join(str(int(v)) for v in idx)}")
+
+    def visit(node: Any, path_parts: list[str]) -> Any:
+        path = "/".join(path_parts)
+        if _is_linear(node):
+            if not _quantizable(path, node, cfg.quant, exclude) or (
+                    select is not None and not select(path)):
+                report.skipped.append(path)
+                return node
+            w = node["w"]
+            bias = node.get("b")
+            lead = w.shape[:-2]
+            k, n = w.shape[-2], w.shape[-1]
+            if lead:  # stacked layers: quantize each slice
+                w_flat = w.reshape(-1, k, n)
+                qs, ss, zs, iscs, any_calib = [], [], [], [], False
+                for i in range(w_flat.shape[0]):
+                    idx = np.unravel_index(i, lead)
+                    st = stats_for(path_parts[:-1] + [path_parts[-1]],
+                                   tuple(int(v) for v in idx))
+                    any_calib = any_calib or st is not None
+                    q, sc, z, isc = _quantize_2d(w_flat[i], st, cfg)
+                    qs.append(q); ss.append(sc); zs.append(z); iscs.append(isc)
+                from repro.core.packing import pack_int4
+                packed = PackedLinear(
+                    qweight=jnp.stack([pack_int4(q) for q in qs]).reshape(
+                        *lead, k // 8, n),
+                    scales=jnp.stack(ss).reshape(*lead, k // cfg.quant.group_size, n),
+                    zeros=jnp.stack(zs).astype(jnp.int8).reshape(
+                        *lead, k // cfg.quant.group_size, n),
+                    input_scale=jnp.stack(iscs).reshape(*lead, k),
+                    bias=bias,
+                    group_size=cfg.quant.group_size,
+                )
+                n_lin = int(np.prod(lead))
+                if any_calib:
+                    report.calibrated.append(path)
+            else:
+                st = stats_for(path_parts, ())
+                q, sc, z, isc = _quantize_2d(w, st, cfg)
+                packed = pack_linear(q, sc, z, isc, bias, cfg.quant)
+                n_lin = 1
+                if st is not None:
+                    report.calibrated.append(path)
+            report.quantized.append(path)
+            report.packed_bytes += n_lin * packed_linear_nbytes(
+                k, n, cfg.quant.group_size)
+            report.dense_bytes_fp16 += n_lin * k * n * 2
+            return packed
+        if isinstance(node, dict):
+            return {k2: visit(v, path_parts + [k2]) for k2, v in node.items()}
+        return node
+
+    return visit(params, []), report
+
+
+def model_size_bytes(params: Any, quantized: bool,
+                     cfg: QuantConfig | None = None,
+                     exclude: tuple[str, ...] = DEFAULT_EXCLUDE) -> int:
+    """Serialized model size: fp16 baseline vs AWQ_MACRO-packed (paper Table III).
+
+    Baseline = every param in fp16 (the paper's 988 MB convention). Quantized
+    = quantizable linears in byte-exact AWQ_MACRO format, everything else
+    fp16.
+    """
+    cfg = cfg or QuantConfig()
+    total = 0
+
+    def visit(node: Any, path_parts: list[str]) -> None:
+        nonlocal total
+        path = "/".join(path_parts)
+        if isinstance(node, PackedLinear):  # already-quantized params
+            lead = int(np.prod(node.qweight.shape[:-2])) \
+                if node.qweight.ndim > 2 else 1
+            total += lead * packed_linear_nbytes(node.k, node.n,
+                                                 node.group_size)
+            if node.bias is not None:
+                total += int(np.prod(node.bias.shape)) * 2
+            return
+        if _is_linear(node):
+            w = node["w"]
+            lead = int(np.prod(w.shape[:-2])) if w.ndim > 2 else 1
+            k, n = w.shape[-2], w.shape[-1]
+            if quantized and _quantizable(path, node, cfg, exclude):
+                total += lead * packed_linear_nbytes(k, n, cfg.group_size)
+            else:
+                total += lead * k * n * 2
+            if node.get("b") is not None:
+                total += int(np.prod(node["b"].shape)) * 2
+            return
+        if isinstance(node, dict):
+            for k2, v in node.items():
+                visit(v, path_parts + [k2])
+            return
+        if hasattr(node, "shape"):
+            total += int(np.prod(node.shape)) * 2
+
+    visit(params, [])
+    return total

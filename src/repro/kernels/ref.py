@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated elementwise against these
+references (interpret mode on CPU, sweeping shapes/dtypes). The math here is
+the paper's PE dataflow (Fig. 4d): ``w = (q - zero) * scale``, then MAC with
+the input activation, accumulated in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PACK, PackedLinear, unpack_int4
+
+
+def dequant_ref(qweight: jax.Array, scales: jax.Array, zeros: jax.Array,
+                group_size: int, dtype=jnp.float32) -> jax.Array:
+    """Unpack + dequantize packed weights → float ``[K, N]``."""
+    q = unpack_int4(qweight)  # [K, N] int32
+    k, n = q.shape
+    g = k // group_size
+    qg = q.reshape(g, group_size, n).astype(jnp.float32)
+    w = (qg - zeros[:, None, :].astype(jnp.float32)) \
+        * scales[:, None, :].astype(jnp.float32)
+    return w.reshape(k, n).astype(dtype)
+
+
+def awq_matmul_ref(x: jax.Array, qweight: jax.Array, scales: jax.Array,
+                   zeros: jax.Array, group_size: int,
+                   compute_dtype=jnp.float32) -> jax.Array:
+    """``x [M, K] @ dequant(qweight) [K, N] -> [M, N] float32``."""
+    w = dequant_ref(qweight, scales, zeros, group_size, compute_dtype)
+    return jnp.dot(x.astype(compute_dtype), w,
+                   preferred_element_type=jnp.float32)
+
+
+def awq_matmul_ref_packed(x: jax.Array, p: PackedLinear,
+                          compute_dtype=jnp.float32) -> jax.Array:
+    return awq_matmul_ref(x, p.qweight, p.scales, p.zeros, p.group_size,
+                          compute_dtype)
+
+
+def awq_gateup_ref(x: jax.Array, qw_gate, s_gate, z_gate, qw_up, s_up, z_up,
+                   group_size: int, compute_dtype=jnp.float32) -> jax.Array:
+    """Fused SwiGLU FFN front: ``silu(x @ Wg) * (x @ Wu)`` (paper Table I's
+    dominant 51% row, gate+up projections)."""
+    g = awq_matmul_ref(x, qw_gate, s_gate, z_gate, group_size, compute_dtype)
+    u = awq_matmul_ref(x, qw_up, s_up, z_up, group_size, compute_dtype)
+    return jax.nn.silu(g) * u
+
+
+def flash_attention_ref(q, k, v, *, scale=None, causal=True,
+                        window: int = 0):
+    """Oracle for the flash kernel: plain masked softmax attention.
+
+    q [B, H, S, hd], k/v [B, Hkv, S, hd] → [B, H, S, hd] (GQA broadcast).
+    """
+    b, h, s, hd = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, hkv, g, s, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, s, hd).astype(q.dtype)

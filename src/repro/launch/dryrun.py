@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init. 512 placeholder CPU devices back both production
+meshes: single-pod (16 data × 16 model = 256 chips) and multi-pod
+(2 pods × 16 × 16 = 512 chips).
+
+Per cell this script:
+  1. builds ShapeDtypeStruct inputs (launch/specs.py — nothing allocates),
+  2. jit(step_fn, in_shardings=…).lower(...).compile(),
+  3. prints memory_analysis (fits-per-chip proof) and cost_analysis,
+  4. parses collective bytes from the compiled HLO,
+  5. writes a JSON record consumed by EXPERIMENTS.md §Dry-run/§Roofline and
+     `benchmarks/roofline.py`.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --cell train_4k \
+      --mesh single --quant awq --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+import repro.configs as configs
+from repro.configs import SHAPES, cells_for
+from repro.core.qlinear import set_execution_config
+from repro.distributed import sharding as shd
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.roofline.analysis import RooflineTerms, hlo_costs
+from repro.roofline.costmodel import analytic_terms
+from repro.training import TrainConfig, make_train_step
+
+
+def model_flops_estimate(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D (train) or 2·N_active·D (decode/
+    prefill forward-only), D = tokens processed this step."""
+    n = cfg.n_active_params()
+    if cell.step == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.step == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per sequence
+
+
+def lower_cell(arch: str, cell_name: str, mesh, quant: bool,
+               variant: str = "baseline"):
+    cfg = configs.get_config(arch)
+    if "kvint8" in variant:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, kv_quant="int8")  # §Perf A4
+    cell = SHAPES[cell_name]
+    model = build_model(cfg)
+    set_execution_config(impl="ref")   # dry-run lowers the jnp dequant path
+
+    with shd.use_mesh(mesh):
+        if cell.step == "train":
+            state_sds, state_shardings = S.train_state_specs(cfg, mesh)
+            batch_sds = S.batch_specs(cfg, cell, mesh)
+            step = make_train_step(model, TrainConfig())
+            fn = jax.jit(step, out_shardings=(state_shardings, None))
+            lowered = fn.lower(state_sds, batch_sds)
+        elif cell.step == "prefill":
+            params_sds = S.param_specs(cfg, mesh, quant)
+            batch_sds = S.batch_specs(cfg, cell, mesh)
+            cache_sds = S.cache_specs(cfg, mesh, cell.global_batch,
+                                      cell.seq_len)
+            fn = jax.jit(model.prefill)
+            lowered = fn.lower(params_sds, batch_sds, cache_sds)
+        else:  # decode
+            params_sds = S.param_specs(cfg, mesh, quant)
+            cache_sds = S.cache_specs(cfg, mesh, cell.global_batch,
+                                      cell.seq_len)
+            tok, pos = S.decode_token_specs(mesh, cell.global_batch)
+            if variant == "fused-sample":
+                # §Perf A2: greedy sampling fused into the step — logits
+                # stay vocab-sharded; only the [B] token crosses the wire.
+                import jax.numpy as jnp
+
+                def serve_step(params, cache, token, pos):
+                    logits, cache = model.decode_step(params, cache, token,
+                                                      pos)
+                    return jnp.argmax(logits, -1).astype(jnp.int32), cache
+                fn = jax.jit(serve_step, donate_argnums=(1,))
+            else:
+                fn = jax.jit(model.decode_step)
+            lowered = fn.lower(params_sds, cache_sds, tok, pos)
+    return lowered, cfg, cell
+
+
+def run_cell(arch: str, cell_name: str, mesh_kind: str, quant: bool,
+             out_dir: str | None, variant: str = "baseline") -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    lowered, cfg, cell = lower_cell(arch, cell_name, mesh, quant, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    costs = hlo_costs(compiled.as_text())
+    analytic = analytic_terms(cfg, cell_name, chips, quant)
+    # compute/collective terms from the compiled artifact (dot flops and
+    # collective operand bytes parse exactly); memory term from the analytic
+    # model (XLA-CPU widens bf16 dots to f32 — its byte counts are recorded
+    # as `hlo_bytes_upper_bound`, see roofline/costmodel.py docstring).
+    terms = RooflineTerms(
+        flops=max(costs["flops"], analytic["analytic_flops_global"] / chips),
+        bytes_accessed=analytic["analytic_bytes_global"] / chips,
+        collective_bytes=costs["total"], chips=chips,
+        model_flops=model_flops_estimate(cfg, cell))
+
+    rec = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_kind,
+        "variant": variant,
+        "chips": chips, "quant": "awq-int4" if quant else "none",
+        "step": cell.step,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes",
+                                      0)),
+        },
+        "collectives": {k: v for k, v in costs.items()
+                        if k not in ("flops", "bytes")},
+        "hlo_flops": costs["flops"],
+        "hlo_bytes_upper_bound": costs["bytes"],
+        "raw_cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes": float(ca.get("bytes accessed", 0.0))},
+        **analytic,
+        **terms.to_dict(),
+    }
+    print(f"[dryrun] {arch} {cell_name} mesh={mesh_kind} "
+          f"quant={rec['quant']}")
+    print(f"  memory_analysis: {rec['memory_analysis']}")
+    print(f"  cost: flops/chip={terms.flops:.3e} bytes/chip="
+          f"{terms.bytes_accessed:.3e} coll_bytes/chip="
+          f"{terms.collective_bytes:.3e}")
+    print(f"  terms: compute={terms.compute_s:.3e}s memory="
+          f"{terms.memory_s:.3e}s collective={terms.collective_s:.3e}s "
+          f"dominant={terms.dominant} roofline_frac="
+          f"{terms.roofline_fraction:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{cell_name}__{mesh_kind}__{rec['quant']}"
+        if variant != "baseline":
+            fn += f"__{variant}"
+        fn += ".json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="awq", choices=["awq", "none"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    jobs = []
+    if args.all:
+        for arch in configs.list_archs():
+            for cell in cells_for(arch):
+                for mk in meshes:
+                    jobs.append((arch, cell, mk))
+    else:
+        for mk in meshes:
+            jobs.append((args.arch, args.cell, mk))
+
+    failures = []
+    for arch, cell, mk in jobs:
+        quant = (args.quant == "awq") and SHAPES[cell].step != "train"
+        try:
+            run_cell(arch, cell, mk, quant, args.out, args.variant)
+        except Exception as e:  # a failing cell is a bug in the system
+            failures.append((arch, cell, mk, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED cells: {failures}")
+        raise SystemExit(1)
+    print(f"dry-run OK: {len(jobs)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the 512-device dry-run sets XLA_FLAGS before
+any jax import, and smoke tests keep their single real device.
+
+Mesh semantics (DESIGN.md §5): DP spans pod×data, TP spans model. The `pod`
+axis exists so the multi-pod dry-run proves gradient all-reduce shards over
+the cross-pod (DCI) boundary; serving uses pods as independent replicas.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — run "
+            "under launch/dryrun.py (sets xla_force_host_platform_device_"
+            "count) or on real hardware")
+    # more devices than the mesh (e.g. 512 placeholders, single-pod 256):
+    # take a prefix — placement is irrelevant for lowering/compile analysis.
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over the locally available devices (tests, examples)."""
+    dev = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    return Mesh(dev, ("data", "model"))

@@ -1,0 +1,81 @@
+"""Serving launcher: AWQ-quantize a model and serve batched requests.
+
+The end-to-end path of the paper (§III-A "fully automated"): init (or load)
+float params → calibration forward → AWQ search + pack (GS=64 INT4) → serve
+with the fused dequant-matmul path. ``--quant none`` serves the float
+baseline (the paper's 2.8 tok/s side of Table III).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen25-05b --smoke \
+      --batch 4 --prompt-len 32 --max-new 32 --quant awq
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.core import (AWQConfig, CalibrationCapture, QuantConfig,
+                        quantize_params)
+from repro.core.pipeline import model_size_bytes
+from repro.data import make_dataset
+from repro.models import build_model
+from repro.serving import GenerationEngine, SamplerConfig
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen25-05b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--quant", default="awq", choices=["awq", "none"])
+    ap.add_argument("--group-size", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    print(f"[serve] {cfg.name}: fp16-serialized size "
+          f"{model_size_bytes(params, quantized=False)/1e6:.2f} MB")
+
+    if args.quant == "awq":
+        ds = make_dataset(cfg, 2, min(64, cfg.max_seq_len), seed=123)
+        calib = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()}
+        t0 = time.time()
+        with CalibrationCapture() as cap:
+            model.loss(params, calib)
+        qcfg = AWQConfig(quant=QuantConfig(group_size=args.group_size))
+        params, report = quantize_params(params, cap.stats, qcfg)
+        print(f"[serve] AWQ PTQ in {time.time()-t0:.1f}s: "
+              f"{len(report.quantized)} linears quantized "
+              f"({len(report.calibrated)} calibrated), "
+              f"{len(report.skipped)} kept FP")
+        print(f"[serve] AWQ_MACRO-serialized size "
+              f"{model_size_bytes(params, quantized=True)/1e6:.2f} MB")
+
+    engine = GenerationEngine(
+        model, params, max_seq=args.prompt_len + args.max_new,
+        sampler=SamplerConfig(temperature=args.temperature))
+    ds = make_dataset(cfg, args.batch, args.prompt_len, seed=args.seed)
+    prompt = {"tokens": jnp.asarray(ds.batch_at(0)["tokens"])}
+
+    t0 = time.time()
+    out = engine.generate(prompt, args.max_new)
+    dt = time.time() - t0
+    tput = out.size / dt
+    print(f"[serve] generated {out.shape} tokens in {dt:.2f}s "
+          f"({tput:.1f} tok/s wall on {jax.default_backend()})")
+    print(f"[serve] sample: {out[0][:16].tolist()}")
+    return {"tokens_per_s": tput, "shape": list(out.shape)}
+
+
+if __name__ == "__main__":
+    main()

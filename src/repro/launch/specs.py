@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape-cell) input.
+
+Nothing here allocates: params/optimizer/caches/batches are all
+`jax.eval_shape`-derived structs with NamedShardings attached, which is what
+lets the dry-run lower+compile 9B-param models on a CPU container
+(DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeCell, get_config
+from repro.configs.base import ModelConfig
+from repro.core.awq import AWQConfig
+from repro.core.pipeline import quantize_params
+from repro.core.quantize import QuantConfig
+from repro.distributed import sharding as shd
+from repro.models import build_model
+from repro.training.train_step import init_train_state
+
+
+def _sds(tree: Any, shardings: Any) -> Any:
+    """Attach shardings to a ShapeDtypeStruct tree."""
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s),
+        tree, shardings)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh) -> dict:
+    """Global-batch input ShapeDtypeStructs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    bp = NamedSharding(mesh, shd._resolve(mesh, ("batch", None), (b, s)))
+    out: dict = {}
+    if cfg.frontend == "audio":
+        fshape = (b, s, cfg.frontend_dim)
+        fsh = NamedSharding(mesh, shd._resolve(mesh, ("batch", None, None),
+                                               fshape))
+        out["features"] = jax.ShapeDtypeStruct(fshape, jnp.float32,
+                                               sharding=fsh)
+    else:
+        if cfg.frontend == "vision":
+            s_text = s - cfg.num_patches  # image span + text = cell seq_len
+            ishape = (b, cfg.num_patches, cfg.frontend_dim)
+            ish = NamedSharding(mesh, shd._resolve(
+                mesh, ("batch", None, None), ishape))
+            out["images"] = jax.ShapeDtypeStruct(ishape, jnp.float32,
+                                                 sharding=ish)
+        else:
+            s_text = s
+        tp = NamedSharding(mesh, shd._resolve(mesh, ("batch", None),
+                                              (b, s_text)))
+        out["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32,
+                                             sharding=tp)
+    if cell.step == "train" or cfg.is_encoder:
+        lshape = (b, s if cfg.frontend != "vision" else s_text)
+        lsh = NamedSharding(mesh, shd._resolve(mesh, ("batch", None), lshape))
+        out["labels"] = jax.ShapeDtypeStruct(lshape, jnp.int32, sharding=lsh)
+    if cell.step != "train":
+        out.pop("labels", None)
+    return out
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, quant: bool) -> Any:
+    model = build_model(cfg)
+    p_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if quant:
+        qcfg = AWQConfig(quant=QuantConfig(group_size=64))
+        p_shapes = jax.eval_shape(
+            lambda: quantize_params(
+                jax.tree.map(lambda t: jnp.zeros(t.shape, t.dtype),
+                             p_shapes), None, qcfg)[0])
+    shardings = shd.make_sharding(p_shapes, mesh, shd.param_pspec, cfg)
+    return _sds(p_shapes, shardings)
+
+
+def train_state_specs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    model = build_model(cfg)
+    st = jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0)))
+    p_sh = shd.pspec_tree(st["params"], mesh, shd.param_pspec, cfg)
+    m_sh = jax.tree.map(
+        lambda spec, leaf: shd.zero1_pspec(spec, leaf.shape, mesh),
+        p_sh, st["params"], is_leaf=lambda x: isinstance(x, P))
+    specs = {"params": p_sh, "opt": {"m": m_sh, "v": m_sh}, "step": P()}
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return _sds(st, shardings), shardings
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                max_seq: int) -> Any:
+    model = build_model(cfg)
+    c_shapes = jax.eval_shape(
+        lambda: model.init_cache(batch, max_seq))
+    shardings = shd.make_sharding(c_shapes, mesh, shd.cache_pspec, cfg)
+    return _sds(c_shapes, shardings)
+
+
+def decode_token_specs(mesh: Mesh, batch: int) -> tuple:
+    sh = NamedSharding(mesh, shd._resolve(mesh, ("batch",), (batch,)))
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=sh)
+    pos = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=sh)
+    return tok, pos

@@ -1,0 +1,282 @@
+"""Attention: GQA/MQA/MHA, sliding-window, chunked-long-seq, decode caches.
+
+Three execution regimes:
+
+  * train/prefill — q-chunked attention (`attn_chunk` queries at a time, full
+    key rows per chunk) so 32k-token prefill never materializes an S×S score
+    matrix. Softmax rows are complete per chunk → exact, no online rescaling.
+  * decode (full cache) — single-token GEMV attention against a
+    ``[B, S_max, Hkv, hd]`` cache. The cache is **sequence-sharded over the
+    `model` mesh axis** (SP-decode, DESIGN.md §5); the masked softmax reduces
+    over the sharded axis, which XLA lowers to two small all-reduces.
+  * decode (ring cache) — sliding-window layers keep a ``[B, W, Hkv, hd]``
+    ring buffer; slot ``s`` holds absolute position ``p - ((p - s) mod W)``,
+    reconstructed in closed form for masking.
+
+Everything runs through `layers.linear`, so all four projections quantize
+through the paper's AWQ pipeline untouched.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models import layers
+from repro.models.layers import apply_rope, linear, rmsnorm, rope_cos_sin
+
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p = {
+        "wq": layers.linear_init(ks[0], d, cfg.q_dim, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wk": layers.linear_init(ks[1], d, cfg.kv_dim, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wv": layers.linear_init(ks[2], d, cfg.kv_dim, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wo": layers.linear_init(ks[3], cfg.q_dim, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.norm_init(cfg.head_dim, dtype=dtype,
+                                       plus_one=cfg.rms_plus_one)
+        p["k_norm"] = layers.norm_init(cfg.head_dim, dtype=dtype,
+                                       plus_one=cfg.rms_plus_one)
+    return p
+
+
+def _rope_theta(cfg, window: int) -> float:
+    if window > 0 and cfg.local_rope_theta:
+        return cfg.local_rope_theta
+    return cfg.rope_theta
+
+
+def _rot_dim(cfg) -> int:
+    rd = int(cfg.head_dim * cfg.rope_fraction)
+    return rd - rd % 2
+
+
+def _project_qkv(p, x, cfg, positions, window, name):
+    """x [..., D] -> q [..., H, hd], k/v [..., Hkv, hd], rope'd + qk-norm'd."""
+    nm = (lambda s: None) if name is None else name
+    lead = x.shape[:-1]
+    q = linear(p["wq"], x, nm("wq")).reshape(*lead, cfg.num_heads,
+                                             cfg.head_dim)
+    k = linear(p["wk"], x, nm("wk")).reshape(*lead, cfg.num_kv_heads,
+                                             cfg.head_dim)
+    v = linear(p["wv"], x, nm("wv")).reshape(*lead, cfg.num_kv_heads,
+                                             cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, eps=cfg.norm_eps,
+                    plus_one=cfg.rms_plus_one)
+        k = rmsnorm(p["k_norm"], k, eps=cfg.norm_eps,
+                    plus_one=cfg.rms_plus_one)
+    rd = _rot_dim(cfg)
+    if rd:
+        cos, sin = rope_cos_sin(positions, rd, _rope_theta(cfg, window))
+        q = apply_rope(q, cos, sin, rd)
+        k = apply_rope(k, cos, sin, rd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+          scale: float) -> jax.Array:
+    """Grouped scaled-dot-product attention over full key rows.
+
+    q [B, C, Hkv, G, hd]; k/v [B, S, Hkv, hd]; *_pos [B, C]/[B, S] absolute
+    positions (k_pos < 0 ⇒ invalid slot). Returns [B, C, Hkv, G, hd].
+    """
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = k_pos[:, None, :] >= 0
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+
+
+def attention(p, x, cfg, *, positions, window: int = 0, causal: bool = True,
+              name=None) -> jax.Array:
+    """Train/prefill attention. x [B, S, D] -> [B, S, D]."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, window, name)
+    g = cfg.num_heads // cfg.num_kv_heads
+    q = q.reshape(b, s, cfg.num_kv_heads, g, cfg.head_dim)
+    q = constrain(q, ("batch", None, "kv_heads", "q_groups", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    scale = cfg.head_dim ** -0.5
+
+    chunk = cfg.attn_chunk
+    msize = 1
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is not None:
+        msize = mesh.shape.get("model", 1)
+    # §Perf C2: when heads don't divide the model axis (smollm 15H, hymba
+    # 25H, gemma 8H, …) head-sharding falls back to replication — every
+    # model rank would redo the full O(S²) attention. Instead shard the
+    # QUERY CHUNKS over `model`: each rank attends its chunks against the
+    # (replicated) K/V; the only added comm is the [B,S,q_dim] output
+    # gather, ~16× smaller than the replicated compute it removes.
+    shard_chunks = (msize > 1 and cfg.num_heads % msize != 0
+                    and s % chunk == 0 and (s // chunk) % msize == 0)
+    if shard_chunks:
+        n_chunks = s // chunk
+        qc = q.reshape(b, n_chunks, chunk, cfg.num_kv_heads, g, cfg.head_dim)
+        qc = constrain(qc, ("batch", "model", None, None, None, None))
+        pc = positions.reshape(b, n_chunks, chunk)
+        out = jax.vmap(
+            lambda q_i, p_i: _sdpa(q_i, k, v, p_i, positions, causal=causal,
+                                   window=window, scale=scale),
+            in_axes=(1, 1), out_axes=1)(qc, pc)
+        out = out.reshape(b, s, cfg.q_dim)
+    elif s > chunk and s % chunk == 0:
+        n_chunks = s // chunk
+        qc = q.reshape(b, n_chunks, chunk, cfg.num_kv_heads, g, cfg.head_dim)
+        qc = jnp.moveaxis(qc, 1, 0)                       # [nc, B, C, ...]
+        pc = jnp.moveaxis(positions.reshape(b, n_chunks, chunk), 1, 0)
+
+        def body(_, qp):
+            q_i, p_i = qp
+            o = _sdpa(q_i, k, v, p_i, positions, causal=causal,
+                      window=window, scale=scale)
+            return None, o
+
+        _, out = jax.lax.scan(body, None, (qc, pc))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.q_dim)
+    else:
+        out = _sdpa(q, k, v, positions, positions, causal=causal,
+                    window=window, scale=scale).reshape(b, s, cfg.q_dim)
+    nm = (lambda s_: None) if name is None else name
+    return linear(p["wo"], out, nm("wo"))
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_seq: int, window: int,
+                  dtype=jnp.bfloat16):
+    s = min(window, max_seq) if window else max_seq
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant == "int8":
+        # paper's bandwidth argument applied to the cache: INT8 codes +
+        # per-(position, head) absmax scale — 2.1× fewer cache bytes/step.
+        sshape = (batch, s, cfg.num_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(sshape, jnp.float32),
+                "vs": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [..., hd] → (int8 codes, per-[...] absmax scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def _ring_positions(pos: jax.Array, w: int) -> jax.Array:
+    """Absolute position held by each ring slot; <0 ⇒ not yet written.
+
+    Slot s (0..W-1) at current position ``pos`` (the token being written)
+    holds the newest absolute position p ≤ pos with p ≡ s (mod W).
+    """
+    slots = jnp.arange(w)[None, :]
+    p = pos[:, None]
+    return p - ((p - slots) % w)
+
+
+def fill_cache_from_prefill(cache, k, v, positions, window: int):
+    """Write prefill keys/values [B, S, ...] into a fresh decode cache."""
+    b, s = k.shape[0], k.shape[1]
+    quant = "ks" in cache
+    if quant:
+        k, ks = _kv_quantize(k)
+        v, vs = _kv_quantize(v)
+    if not window or s <= window:
+        out = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+        }
+        if quant:
+            out["ks"] = jax.lax.dynamic_update_slice(cache["ks"], ks,
+                                                     (0, 0, 0))
+            out["vs"] = jax.lax.dynamic_update_slice(cache["vs"], vs,
+                                                     (0, 0, 0))
+        return out
+    # ring: keep the last W tokens at slot = pos % W
+    kw, vw = k[:, -window:], v[:, -window:]
+    pw = positions[:, -window:] % window                  # [B, W]
+    bidx = jnp.arange(b)[:, None]
+    out = {"k": cache["k"].at[bidx, pw].set(kw.astype(cache["k"].dtype)),
+           "v": cache["v"].at[bidx, pw].set(vw.astype(cache["v"].dtype))}
+    if quant:
+        out["ks"] = cache["ks"].at[bidx, pw].set(ks[:, -window:])
+        out["vs"] = cache["vs"].at[bidx, pw].set(vs[:, -window:])
+    return out
+
+
+def attention_decode(p, cache, x, cfg, *, pos, window: int = 0, name=None):
+    """Single-token decode. x [B, D], pos [B] -> (y [B, D], new cache).
+
+    Cache layout + sharding: see module docstring. The update is a per-sample
+    scatter (continuous batching keeps per-request positions).
+    """
+    b = x.shape[0]
+    q, k1, v1 = _project_qkv(p, x, cfg, pos, window, name)  # [B, H(kv), hd]
+    slot = (pos % window) if window else pos
+    bidx = jnp.arange(b)
+    quant = "ks" in cache
+    new_cache = {}
+    if quant:
+        k1, ks1 = _kv_quantize(k1)
+        v1, vs1 = _kv_quantize(v1)
+        new_cache["ks"] = constrain(
+            cache["ks"].at[bidx, slot].set(ks1),
+            ("batch", "cache_seq", None))
+        new_cache["vs"] = constrain(
+            cache["vs"].at[bidx, slot].set(vs1),
+            ("batch", "cache_seq", None))
+    ck = cache["k"].at[bidx, slot].set(k1.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v1.astype(cache["v"].dtype))
+    ck = constrain(ck, ("batch", "cache_seq", None, None))
+    cv = constrain(cv, ("batch", "cache_seq", None, None))
+    new_cache["k"], new_cache["v"] = ck, cv
+    adt = jnp.dtype(cfg.activation_dtype)
+    if quant:
+        # dequant at point of use — on TPU this fuses into the attention
+        # dots (same role as the AWQ weight dequant in the MAC pipeline)
+        ck = _kv_dequant(ck, new_cache["ks"], adt)
+        cv = _kv_dequant(cv, new_cache["vs"], adt)
+
+    if window:
+        k_pos = _ring_positions(pos, ck.shape[1])
+    else:
+        s_max = ck.shape[1]
+        k_pos = jnp.where(jnp.arange(s_max)[None, :] <= pos[:, None],
+                          jnp.arange(s_max)[None, :], -1)
+
+    g = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, 1, cfg.num_kv_heads, g, cfg.head_dim)
+    out = _sdpa(qg, ck, cv, pos[:, None], k_pos, causal=bool(window),
+                window=window, scale=cfg.head_dim ** -0.5)
+    out = out.reshape(b, cfg.q_dim)
+    nm = (lambda s_: None) if name is None else name
+    y = linear(p["wo"], out, nm("wo"))
+    return y, new_cache

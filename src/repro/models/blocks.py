@@ -1,0 +1,228 @@
+"""Transformer block assembly: mixer (attn/MLA/mamba/hymba) + MLP (glu/plain/
+moe), pre-norm residual wiring, per-kind decode caches.
+
+`block_apply` is mode-polymorphic:
+  * mode="train"   — full-sequence forward, no cache.
+  * mode="prefill" — full-sequence forward, returns a populated decode cache.
+  * mode="decode"  — single token [B, D], consumes + returns the cache.
+
+Hymba (arXiv:2411.13676) blocks run attention and the Mamba2 SSD branch in
+parallel on the same normed input, each branch output re-normalized then
+averaged — the paper's "parallel attn∥SSM heads" fusion.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerKind
+from repro.models import attention as attn_mod
+from repro.models import layers, mla as mla_mod, moe as moe_mod, ssm as ssm_mod
+from repro.models.layers import activation, linear, norm
+
+
+# ---------------------------------------------------------------------- init
+
+def mlp_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"up": layers.linear_init(ks[1], d, f, dtype=dtype),
+         "down": layers.linear_init(ks[2], f, d, dtype=dtype)}
+    if cfg.mlp_type == "glu":
+        p["gate"] = layers.linear_init(ks[0], d, f, dtype=dtype)
+    return p
+
+
+def block_init(key, cfg, kind: LayerKind, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    p: dict = {"pre_norm": layers.norm_init(
+        cfg.d_model, norm_type=cfg.norm_type, dtype=dtype,
+        plus_one=cfg.rms_plus_one)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+    elif kind.mixer == "mla":
+        p["attn"] = mla_mod.mla_init(ks[0], cfg, dtype)
+    elif kind.mixer == "mamba":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+    elif kind.mixer == "hymba":
+        p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+        p["attn_out_norm"] = layers.norm_init(cfg.d_model,
+                                              norm_type=cfg.norm_type,
+                                              dtype=dtype,
+                                              plus_one=cfg.rms_plus_one)
+        p["ssm_out_norm"] = layers.norm_init(cfg.d_model,
+                                             norm_type=cfg.norm_type,
+                                             dtype=dtype,
+                                             plus_one=cfg.rms_plus_one)
+    if kind.mlp != "none":
+        p["mlp_norm"] = layers.norm_init(cfg.d_model, norm_type=cfg.norm_type,
+                                         dtype=dtype,
+                                         plus_one=cfg.rms_plus_one)
+        if kind.mlp == "moe":
+            p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg, dtype)
+    return p
+
+
+def init_block_cache(cfg, kind: LayerKind, batch: int, max_seq: int,
+                     dtype=jnp.bfloat16):
+    c: dict = {}
+    if kind.mixer in ("attn", "hymba"):
+        c["kv"] = attn_mod.init_kv_cache(cfg, batch, max_seq, kind.window,
+                                         dtype)
+    if kind.mixer == "mla":
+        c["mla"] = mla_mod.init_mla_cache(cfg, batch, max_seq, dtype)
+    if kind.mixer in ("mamba", "hymba"):
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch)
+    return c
+
+
+# --------------------------------------------------------------------- apply
+
+def _mixer_train(p, x, cfg, kind: LayerKind, positions, name):
+    causal = not cfg.is_encoder
+    if kind.mixer == "attn":
+        sub = (lambda s: name(f"attn/{s}")) if name else None
+        return attn_mod.attention(p["attn"], x, cfg, positions=positions,
+                                  window=kind.window, causal=causal,
+                                  name=sub)
+    if kind.mixer == "mla":
+        sub = (lambda s: name(f"attn/{s}")) if name else None
+        return mla_mod.mla_attention(p["attn"], x, cfg, positions=positions,
+                                     name=sub)
+    if kind.mixer == "mamba":
+        sub = (lambda s: name(f"ssm/{s}")) if name else None
+        return ssm_mod.ssm_mixer(p["ssm"], x, cfg, name=sub)
+    if kind.mixer == "hymba":
+        sub_a = (lambda s: name(f"attn/{s}")) if name else None
+        sub_s = (lambda s: name(f"ssm/{s}")) if name else None
+        ya = attn_mod.attention(p["attn"], x, cfg, positions=positions,
+                                window=kind.window, causal=causal,
+                                name=sub_a)
+        ys = ssm_mod.ssm_mixer(p["ssm"], x, cfg, name=sub_s)
+        ya = norm(p["attn_out_norm"], ya, cfg)
+        ys = norm(p["ssm_out_norm"], ys, cfg)
+        return (ya + ys) * 0.5
+    raise ValueError(kind.mixer)
+
+
+def _mixer_decode(p, cache, x, cfg, kind: LayerKind, pos, name):
+    if kind.mixer == "attn":
+        y, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
+                                          pos=pos, window=kind.window)
+        return y, {"kv": kv}
+    if kind.mixer == "mla":
+        y, mc = mla_mod.mla_decode(p["attn"], cache["mla"], x, cfg, pos=pos)
+        return y, {"mla": mc}
+    if kind.mixer == "mamba":
+        y, sc = ssm_mod.ssm_decode(p["ssm"], cache["ssm"], x, cfg)
+        return y, {"ssm": sc}
+    if kind.mixer == "hymba":
+        ya, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
+                                           pos=pos, window=kind.window)
+        ys, sc = ssm_mod.ssm_decode(p["ssm"], cache["ssm"], x, cfg)
+        ya = norm(p["attn_out_norm"], ya, cfg)
+        ys = norm(p["ssm_out_norm"], ys, cfg)
+        return (ya + ys) * 0.5, {"kv": kv, "ssm": sc}
+    raise ValueError(kind.mixer)
+
+
+def _mlp_apply(p, x, cfg, kind: LayerKind, name):
+    if kind.mlp == "moe":
+        sub = (lambda s: name(f"moe/{s}")) if name else None
+        return moe_mod.moe_apply(p["moe"], x, cfg, name=sub)
+    mp = p["mlp"]
+    nm = (lambda s: name(f"mlp/{s}")) if name else (lambda s: None)
+    if kind.mlp == "glu":
+        h = activation(cfg.act, linear(mp["gate"], x, nm("gate"))) \
+            * linear(mp["up"], x, nm("up"))
+    else:  # plain
+        h = activation(cfg.act, linear(mp["up"], x, nm("up")))
+    return linear(mp["down"], h, nm("down")), jnp.zeros((), jnp.float32)
+
+
+def block_apply(p, x, cfg, kind: LayerKind, *, mode: str, positions=None,
+                cache=None, name=None):
+    """Returns (x_out, cache_out, aux_loss). name: callable local→str or None."""
+    h = norm(p["pre_norm"], x, cfg)
+    if mode == "decode":
+        y, cache = _mixer_decode(p, cache, h, cfg, kind, positions, name)
+    else:
+        y = _mixer_train(p, h, cfg, kind, positions, name)
+        if mode == "prefill" and kind.mixer in ("attn", "mla", "hymba"):
+            cache = _prefill_cache(p, h, cfg, kind, positions, cache)
+        if mode == "prefill" and kind.mixer in ("mamba", "hymba"):
+            cache = _prefill_ssm_cache(p, h, cfg, kind, cache)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if kind.mlp != "none":
+        h2 = norm(p["mlp_norm"], x, cfg)
+        y2, aux = _mlp_apply(p, h2, cfg, kind, name)
+        x = x + y2
+    return x, cache, aux
+
+
+# ------------------------------------------------------------ prefill caches
+
+def _prefill_cache(p, h, cfg, kind, positions, cache):
+    """Recompute K/V (or latent) for the prefilled tokens and fill the cache."""
+    cache = dict(cache or {})
+    if kind.mixer == "mla":
+        c, k_pe = mla_mod._project_latent(p["attn"], h, cfg, positions, None)
+        cache["mla"] = mla_mod.fill_mla_cache_from_prefill(
+            cache["mla"], c, k_pe)
+        return cache
+    _, k, v = attn_mod._project_qkv(p["attn"], h, cfg, positions,
+                                    kind.window, None)
+    cache["kv"] = attn_mod.fill_cache_from_prefill(cache["kv"], k, v,
+                                                   positions, kind.window)
+    return cache
+
+
+def _prefill_ssm_cache(p, h, cfg, kind, cache):
+    """Run the SSD recurrence over the prefill to the final state.
+
+    Reuses the chunked state computation: final state = scan carry after the
+    last chunk; conv caches take the last (d_conv-1) pre-conv inputs.
+    """
+    cache = dict(cache or {})
+    nm = None
+    b, s, _ = h.shape
+    sp = p["ssm"]
+    dc = cfg.ssm_conv
+    ux = linear(sp["wx"], h)
+    ub = linear(sp["wb"], h)
+    uc = linear(sp["wc"], h)
+    old = cache["ssm"]
+    conv_x = ux[:, -(dc - 1):, :].astype(old["conv_x"].dtype) if s >= dc - 1 \
+        else old["conv_x"]
+    conv_b = ub[:, -(dc - 1):, :].astype(old["conv_b"].dtype) if s >= dc - 1 \
+        else old["conv_b"]
+    conv_c = uc[:, -(dc - 1):, :].astype(old["conv_c"].dtype) if s >= dc - 1 \
+        else old["conv_c"]
+
+    # final SSM state via the same chunked recurrence
+    x = _ssm_final_state(sp, h, ux, cfg)
+    return {**cache, "ssm": {"conv_x": conv_x, "conv_b": conv_b,
+                             "conv_c": conv_c, "state": x}}
+
+
+def _ssm_final_state(sp, h, ux, cfg):
+    b, s, _ = h.shape
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hd, ng = cfg.ssm_headdim, cfg.ssm_ngroups
+    x = ssm_mod._causal_conv(ux, sp["conv_x"])
+    bb = ssm_mod._causal_conv(linear(sp["wb"], h), sp["conv_b"])
+    dt = jax.nn.softplus(linear(sp["wdt"], h).astype(jnp.float32)
+                         + sp["dt_bias"][None, None, :])
+    xh = x.reshape(b, s, nh, hd).astype(jnp.float32)
+    rep = nh // ng
+    bh = jnp.repeat(bb.reshape(b, s, ng, ds).astype(jnp.float32), rep, axis=2)
+    a = -jnp.exp(sp["a_log"])[None, None, :]
+    da = dt * a
+    seg = jnp.cumsum(da, axis=1)                       # [B,S,nh]
+    decay_to_end = jnp.exp(seg[:, -1:, :] - seg)       # [B,S,nh]
+    state = jnp.einsum("bjhs,bjh,bjhd->bhds", bh, dt * decay_to_end, xh)
+    return state

@@ -1,0 +1,132 @@
+"""Primitive modules (pure-JAX: init -> nested dict, apply -> array).
+
+The `linear` apply is the framework's single matmul entry point: it
+dispatches float weights vs `PackedLinear` (AWQ-quantized) weights, and
+records calibration activations when a `CalibrationCapture` is active — this
+is how the paper's fully-automated PTQ flow hooks every projection in every
+architecture without per-model code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration
+from repro.core.packing import PackedLinear
+from repro.core.qlinear import qlinear_apply
+
+
+# ---------------------------------------------------------------------- init
+
+def linear_init(key, k: int, n: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(k))
+    p = {"w": (jax.random.normal(key, (k, n)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((n,), dtype)
+    return p
+
+
+def norm_init(d: int, *, norm_type: str = "rmsnorm", dtype=jnp.float32,
+              plus_one: bool = False):
+    gamma = jnp.zeros((d,), dtype) if plus_one else jnp.ones((d,), dtype)
+    p = {"gamma": gamma}
+    if norm_type == "layernorm":
+        p["beta"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+# --------------------------------------------------------------------- apply
+
+def linear(p, x: jax.Array, name: str | None = None) -> jax.Array:
+    """``y = x @ w (+ b)`` with quantized dispatch + calibration capture."""
+    if isinstance(p, PackedLinear):
+        lead = x.shape[:-1]
+        y = qlinear_apply(p, x.reshape(-1, x.shape[-1]))
+        return y.reshape(*lead, y.shape[-1])
+    calibration.record_linear_input(name, x)
+    w = p["w"]
+    y = jnp.dot(x, w.astype(x.dtype), preferred_element_type=jnp.float32)
+    y = y.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm(p, x: jax.Array, *, eps: float = 1e-6,
+            plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32 (the paper's PS-side non-linear op — VPU territory)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    g = p["gamma"].astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (xf * g).astype(dt)
+
+
+def layernorm(p, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["gamma"].astype(jnp.float32)
+            + p["beta"].astype(jnp.float32)).astype(dt)
+
+
+def norm(p, x: jax.Array, cfg) -> jax.Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(p, x, eps=cfg.norm_eps)
+    return rmsnorm(p, x, eps=cfg.norm_eps, plus_one=cfg.rms_plus_one)
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(f"unknown activation {name}")
+
+
+def embed_lookup(p, tokens: jax.Array, *, scale: bool = False) -> jax.Array:
+    table = p["table"]
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.sqrt(jnp.asarray(table.shape[-1], x.dtype))
+    return x
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope_cos_sin(positions: jax.Array, rot_dim: int, theta: float,
+                 dtype=jnp.float32) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables ``[..., rot_dim/2]`` for integer positions."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rot_dim: int) -> jax.Array:
+    """Rotate the first ``rot_dim`` channels of ``x [..., H, hd]``.
+
+    cos/sin are [..., rot_dim/2] broadcast over the head axis. Partial rotary
+    (glm4: rot_dim = hd/2) leaves the tail channels untouched.
+    """
+    half = rot_dim // 2
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    if rot_dim < x.shape[-1]:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out

@@ -1,0 +1,186 @@
+"""Top-level model: embeddings/frontends + stack + head; train/prefill/decode.
+
+One `Model` class serves all 11 configs (10 assigned + the paper's
+qwen2.5-0.5b). Family differences are entirely data-driven:
+
+  * decoder LMs      — token embedding → causal stack → (tied) lm head,
+  * encoder (hubert) — stub frame features → `frame_proj` → bidirectional
+                       stack → classification head over the codebook vocab,
+  * vlm (phi3-v)     — stub patch embeddings → `patch_proj`, prepended to
+                       the token embeddings (labels masked over the image
+                       span); decode is a plain LM step once prefilled.
+
+The loss is chunked-vocab cross-entropy: logits are materialized
+``logits_chunk`` tokens at a time inside a scan, so ``[B, S, V]`` never
+exists (gemma's V=256k × 1M-token batch would be ~2 PB in f32).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import constrain
+from repro.models import layers, stack
+from repro.models.layers import embed_lookup, linear, norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_stack, k_head, k_front = jax.random.split(key, 4)
+        params: dict = {
+            "embed": layers.embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                       dtype),
+            "segments": stack.stack_init(k_stack, cfg, dtype),
+            "final_norm": layers.norm_init(cfg.d_model,
+                                           norm_type=cfg.norm_type,
+                                           dtype=dtype,
+                                           plus_one=cfg.rms_plus_one),
+        }
+        if cfg.frontend == "audio":
+            params["frontend"] = {"frame_proj": layers.linear_init(
+                k_front, cfg.frontend_dim, cfg.d_model, bias=True,
+                dtype=dtype)}
+        elif cfg.frontend == "vision":
+            params["frontend"] = {"patch_proj": layers.linear_init(
+                k_front, cfg.frontend_dim, cfg.d_model, bias=True,
+                dtype=dtype)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.linear_init(
+                k_head, cfg.d_model, cfg.vocab_size, dtype=dtype)
+        return params
+
+    # ------------------------------------------------------------ embeddings
+    def _embed(self, params, batch: dict) -> tuple[jax.Array, jax.Array,
+                                                   jax.Array | None]:
+        """→ (x [B,S,D], positions [B,S], labels or None)."""
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.activation_dtype)
+        labels = batch.get("labels")
+        if cfg.frontend == "audio":
+            feats = batch["features"].astype(adt)
+            x = linear(params["frontend"]["frame_proj"], feats)
+        else:
+            x = embed_lookup(params["embed"], batch["tokens"],
+                             scale=cfg.scale_embed).astype(adt)
+            if cfg.frontend == "vision" and "images" in batch:
+                img = linear(params["frontend"]["patch_proj"],
+                             batch["images"].astype(adt))
+                x = jnp.concatenate([img, x], axis=1)
+                if labels is not None:
+                    pad = jnp.full(img.shape[:2], -1, labels.dtype)
+                    labels = jnp.concatenate([pad, labels], axis=1)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        x = constrain(x, ("batch", None, None))
+        return x, positions, labels
+
+    def _head_logits(self, params, x: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            table = params["embed"]["table"]
+            logits = jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                                table.astype(jnp.float32))
+        else:
+            logits = linear(params["lm_head"],
+                            x.astype(jnp.float32))
+        return logits  # f32
+
+    # ---------------------------------------------------------------- train
+    def loss(self, params, batch: dict) -> tuple[jax.Array, dict]:
+        """Chunked-vocab causal-LM / masked-classification loss."""
+        cfg = self.cfg
+        x, positions, labels = self._embed(params, batch)
+        x, _, aux = stack.stack_apply(params["segments"], x, cfg,
+                                      mode="train", positions=positions)
+        x = norm(params["final_norm"], x, cfg)
+        x = constrain(x, ("batch", None, None))
+
+        if labels is None:
+            raise ValueError("training batch needs labels")
+        b, s, d = x.shape
+        chunk = min(cfg.logits_chunk, s)
+        if s % chunk:
+            chunk = s
+        nc = s // chunk
+        xc = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            xi, li = xs
+            logits = self._head_logits(params, xi)          # [B,c,V] f32
+            logits = constrain(logits, ("batch", None, "vocab"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(
+                logits, jnp.clip(li, 0)[..., None], axis=-1)[..., 0]
+            valid = (li >= 0).astype(jnp.float32)
+            tot += jnp.sum((logz - ll) * valid)
+            cnt += jnp.sum(valid)
+            return (tot, cnt), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (xc, lc))
+        ce = tot / jnp.maximum(cnt, 1.0)
+        return ce + aux, {"ce": ce, "aux": aux, "tokens": cnt}
+
+    # ---------------------------------------------------------------- serve
+    def init_cache(self, batch: int, max_seq: int | None = None,
+                   dtype=jnp.bfloat16) -> Any:
+        cfg = self.cfg
+        return stack.stack_init_cache(cfg, batch,
+                                      max_seq or cfg.max_seq_len, dtype)
+
+    def prefill(self, params, batch: dict, cache: Any
+                ) -> tuple[Any, jax.Array, jax.Array]:
+        """Full-sequence prefill → (cache, last-token logits, next pos [B])."""
+        cfg = self.cfg
+        x, positions, _ = self._embed(params, batch)
+        x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
+                                        mode="prefill", positions=positions,
+                                        cache=cache)
+        x = norm(params["final_norm"], x, cfg)
+        if cfg.is_encoder:
+            logits = self._head_logits(params, x)   # [B, S, V] (tiny V)
+            return cache, logits, positions[:, -1] + 1
+        logits = self._head_logits(params, x[:, -1])
+        return cache, logits, positions[:, -1] + 1
+
+    def decode_step(self, params, cache: Any, token: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, Any]:
+        """One token: token [B] int32, pos [B] → (logits [B, V], cache)."""
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.activation_dtype)
+        x = embed_lookup(params["embed"], token,
+                         scale=cfg.scale_embed).astype(adt)   # [B, D]
+        x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
+                                        mode="decode", positions=pos,
+                                        cache=cache)
+        x = norm(params["final_norm"], x, cfg)
+        logits = self._head_logits(params, x)
+        logits = constrain(logits, ("batch", "vocab"))
+        return logits, cache
+
+    def forward_logits(self, params, batch: dict) -> jax.Array:
+        """Full logits [B,S,V] (small models / eval only)."""
+        cfg = self.cfg
+        x, positions, _ = self._embed(params, batch)
+        x, _, _ = stack.stack_apply(params["segments"], x, cfg,
+                                    mode="train", positions=positions)
+        x = norm(params["final_norm"], x, cfg)
+        return self._head_logits(params, x)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD — state-space duality) mixer: chunked train/prefill + O(1)
+recurrent decode.
+
+Implements the minimal SSD form of arXiv:2405.21060: scalar decay per head
+(A = -exp(a_log)), per-head dt via softplus, grouped B/C (n_groups), short
+depthwise causal conv on x/B/C, gated RMSNorm output.
+
+Chunked algorithm (chunk length Q): within a chunk the token mixing is the
+"attention-like" quadratic form masked by the cumulative decay; across
+chunks a scan carries the [nh, hd, ds] state. Decode is the pure recurrence
+h ← h·exp(dA) + dt·B⊗x — attention-free, constant state, which is why
+mamba2-130m (and hymba's SSM branch) run the long_500k cell that pure
+full-attention architectures skip.
+
+Projections (wz/wx/wb/wc/wdt, out_proj) are separate linears (not the fused
+in_proj of the reference CUDA impl) so TP sharding and AWQ quantization see
+clean per-role matrices — DESIGN.md §2 hardware-adaptation note.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import constrain
+from repro.models import layers
+from repro.models.layers import linear
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    gdim = cfg.ssm_ngroups * ds
+    dc = cfg.ssm_conv
+    p = {
+        "wz": layers.linear_init(ks[0], d, di, dtype=dtype),
+        "wx": layers.linear_init(ks[1], d, di, dtype=dtype),
+        "wb": layers.linear_init(ks[2], d, gdim, dtype=dtype),
+        "wc": layers.linear_init(ks[3], d, gdim, dtype=dtype),
+        "wdt": layers.linear_init(ks[4], d, nh, dtype=dtype),
+        "conv_x": {"k": (jax.random.normal(ks[5], (dc, di)) / dc).astype(dtype),
+                   "b": jnp.zeros((di,), dtype)},
+        "conv_b": {"k": (jax.random.normal(ks[6], (dc, gdim)) / dc).astype(dtype),
+                   "b": jnp.zeros((gdim,), dtype)},
+        "conv_c": {"k": (jax.random.normal(ks[7], (dc, gdim)) / dc).astype(dtype),
+                   "b": jnp.zeros((gdim,), dtype)},
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "ssm_d": jnp.ones((nh,), jnp.float32),
+        "out_norm": layers.norm_init(di, dtype=dtype),
+        "out_proj": layers.linear_init(ks[8], di, d, dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(u: jax.Array, kern: dict) -> jax.Array:
+    """Depthwise causal conv1d + silu. u [B, S, C], kernel [dc, C]."""
+    dc = kern["k"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * kern["k"][i][None, None, :]
+              for i in range(dc))
+    return jax.nn.silu(out + kern["b"][None, None, :])
+
+
+def _conv_step(u1: jax.Array, conv_cache: jax.Array, kern: dict):
+    """One-token causal conv. u1 [B, C]; cache [B, dc-1, C] (past inputs)."""
+    window = jnp.concatenate([conv_cache, u1[:, None, :]], axis=1)  # [B,dc,C]
+    out = jnp.einsum("bdc,dc->bc", window, kern["k"]) + kern["b"][None, :]
+    return jax.nn.silu(out), window[:, 1:, :]
+
+
+def _heads(x, nh, hd):
+    return x.reshape(*x.shape[:-1], nh, hd)
+
+
+def ssm_mixer(p, x_in: jax.Array, cfg, name=None) -> jax.Array:
+    """Train/prefill SSD. x_in [B, S, D] → [B, S, D]."""
+    nm = (lambda s: None) if name is None else name
+    b, s, _ = x_in.shape
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hd, ng = cfg.ssm_headdim, cfg.ssm_ngroups
+
+    z = linear(p["wz"], x_in, nm("wz"))
+    x = _causal_conv(linear(p["wx"], x_in, nm("wx")), p["conv_x"])
+    bb = _causal_conv(linear(p["wb"], x_in, nm("wb")), p["conv_b"])
+    cc = _causal_conv(linear(p["wc"], x_in, nm("wc")), p["conv_c"])
+    dt = jax.nn.softplus(
+        linear(p["wdt"], x_in, nm("wdt")).astype(jnp.float32)
+        + p["dt_bias"][None, None, :])                       # [B, S, nh]
+    x = constrain(x, ("batch", None, "ssm_inner"))
+
+    xh = _heads(x, nh, hd).astype(jnp.float32)               # [B,S,nh,hd]
+    # broadcast groups → heads
+    bg = _heads(bb, ng, ds).astype(jnp.float32)              # [B,S,ng,ds]
+    cg = _heads(cc, ng, ds).astype(jnp.float32)
+    rep = nh // ng
+    bh = jnp.repeat(bg, rep, axis=2)                         # [B,S,nh,ds]
+    ch = jnp.repeat(cg, rep, axis=2)
+
+    a = -jnp.exp(p["a_log"])[None, None, :]                  # [1,1,nh]
+    da = dt * a                                              # [B,S,nh]
+
+    q = min(cfg.ssm_chunk, s)
+    if s % q:
+        q = s  # fallback: single chunk
+    nc = s // q
+
+    def reshape_c(t):
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    xc, bc, cc_, dac, dtc = map(reshape_c, (xh, bh, ch, da, dt))
+    seg = jnp.cumsum(dac, axis=2)                            # [B,nc,Q,nh]
+
+    # intra-chunk (quadratic, decay-masked). Mask the EXPONENT, not the
+    # result: exp() of anti-causal entries overflows and poisons the
+    # gradient through jnp.where (inf * 0 = NaN in the cotangent).
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]       # [B,nc,Qi,Qj,nh]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    li = jnp.where(causal[None, None, :, :, None], li, -1e30)
+    decay = jnp.exp(li)
+    scores = jnp.einsum("bnihs,bnjhs->bnijh", cc_, bc) * decay \
+        * dtc[:, :, None, :, :]                              # [B,nc,Qi,Qj,nh]
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", scores, xc)
+
+    # chunk states + inter-chunk scan
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)          # [B,nc,Q,nh]
+    state_c = jnp.einsum("bnjhs,bnjh,bnjhd->bnhds",
+                         bc, dtc * decay_to_end, xc)         # [B,nc,nh,hd,ds]
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                  # [B,nc,nh]
+
+    def scan_body(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # [B,nc,nh,hd,ds]
+
+    y_inter = jnp.einsum("bnihs,bnhds->bnihd", cc_ * jnp.exp(seg)[..., None],
+                         h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    y = y + xh.reshape(b, s, nh, hd) * p["ssm_d"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x_in.dtype)
+
+    y = layers.rmsnorm(p["out_norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    return linear(p["out_proj"], y, nm("out_proj"))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    gdim = cfg.ssm_ngroups * ds
+    dc = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((batch, dc - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, dc - 1, gdim), dtype),
+        "conv_c": jnp.zeros((batch, dc - 1, gdim), dtype),
+        "state": jnp.zeros((batch, nh, cfg.ssm_headdim, ds), jnp.float32),
+    }
+
+
+def ssm_decode(p, cache, x_in: jax.Array, cfg, name=None):
+    """One-token recurrence. x_in [B, D] → (y [B, D], new cache)."""
+    nm = (lambda s: None) if name is None else name
+    b = x_in.shape[0]
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    hd, ng = cfg.ssm_headdim, cfg.ssm_ngroups
+
+    z = linear(p["wz"], x_in, nm("wz"))
+    x, cx = _conv_step(linear(p["wx"], x_in, nm("wx")), cache["conv_x"],
+                       p["conv_x"])
+    bb, cb = _conv_step(linear(p["wb"], x_in, nm("wb")), cache["conv_b"],
+                        p["conv_b"])
+    cc, ccs = _conv_step(linear(p["wc"], x_in, nm("wc")), cache["conv_c"],
+                         p["conv_c"])
+    dt = jax.nn.softplus(
+        linear(p["wdt"], x_in, nm("wdt")).astype(jnp.float32)
+        + p["dt_bias"][None, :])                              # [B, nh]
+
+    xh = _heads(x, nh, hd).astype(jnp.float32)                # [B,nh,hd]
+    rep = nh // ng
+    bh = jnp.repeat(_heads(bb, ng, ds).astype(jnp.float32), rep, axis=1)
+    ch = jnp.repeat(_heads(cc, ng, ds).astype(jnp.float32), rep, axis=1)
+
+    a = -jnp.exp(p["a_log"])[None, :]                         # [1,nh]
+    da = jnp.exp(dt * a)                                      # [B,nh]
+    h = cache["state"] * da[:, :, None, None] + \
+        jnp.einsum("bh,bhs,bhd->bhds", dt, bh, xh)            # [B,nh,hd,ds]
+    y = jnp.einsum("bhds,bhs->bhd", h, ch)                    # [B,nh,hd]
+    y = y + xh * p["ssm_d"][None, :, None]
+    y = y.reshape(b, di).astype(x_in.dtype)
+    y = layers.rmsnorm(p["out_norm"], y * jax.nn.silu(z), eps=cfg.norm_eps)
+    out = linear(p["out_proj"], y, nm("out_proj"))
+    return out, {"conv_x": cx, "conv_b": cb, "conv_c": ccs,
+                 "state": h}

@@ -1,0 +1,97 @@
+"""Layer-stack executor: scan over segments of identical block kinds.
+
+Uniform stacks (most archs) compile as ONE scanned block regardless of depth;
+non-uniform stacks (gemma3's 5:1 local:global, hymba's 3 global layers,
+deepseek's first dense layer) break into consecutive-run segments, each
+scanned — compile time is O(#segments), not O(#layers), which keeps the
+512-device dry-run tractable (DESIGN.md §7).
+
+Calibration mode (`CalibrationCapture` active) switches to an eager python
+loop so activation statistics are concrete; capture names follow the
+``<param-path>@<layer-idx>`` convention consumed by `core.pipeline`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration
+from repro.models import blocks
+
+
+def seg_name(si: int) -> str:
+    return f"seg_{si}"
+
+
+def stack_init(key, cfg, dtype=jnp.float32):
+    """Params: {"seg_0": stacked block params [L0, ...], "seg_1": ...}."""
+    segs = cfg.segments()
+    keys = jax.random.split(key, len(segs))
+    out = {}
+    for si, ((kind, n), k) in enumerate(zip(segs, keys)):
+        layer_keys = jax.random.split(k, n)
+        stacked = jax.vmap(
+            lambda kk: blocks.block_init(kk, cfg, kind, dtype))(layer_keys)
+        out[seg_name(si)] = stacked
+    return out
+
+
+def stack_init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    out = {}
+    for si, (kind, n) in enumerate(cfg.segments()):
+        one = blocks.init_block_cache(cfg, kind, batch, max_seq, dtype)
+        out[seg_name(si)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+    return out
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def stack_apply(params, x, cfg, *, mode: str, positions, cache=None):
+    """Run all segments. Returns (x, cache_out, aux_loss_sum)."""
+    segs = cfg.segments()
+    aux_total = jnp.zeros((), jnp.float32)
+    cache_out = {} if cache is not None else None
+
+    if calibration.capture_active():
+        # eager per-layer loop with capture names
+        for si, (kind, n) in enumerate(segs):
+            p_seg = params[seg_name(si)]
+            c_seg = cache[seg_name(si)] if cache is not None else None
+            new_layers = []
+            for i in range(n):
+                nm = (lambda local, _si=si, _i=i:
+                      f"segments/{seg_name(_si)}/{local}@{_i}")
+                c_i = _take(c_seg, i) if c_seg is not None else None
+                x, c_new, aux = blocks.block_apply(
+                    _take(p_seg, i), x, cfg, kind, mode=mode,
+                    positions=positions, cache=c_i, name=nm)
+                aux_total += aux
+                new_layers.append(c_new)
+            if cache_out is not None:
+                cache_out[seg_name(si)] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *new_layers)
+        return x, cache_out, aux_total
+
+    for si, (kind, n) in enumerate(segs):
+        p_seg = params[seg_name(si)]
+        c_seg = cache[seg_name(si)] if cache is not None else None
+
+        def body(carry, xs, _kind=kind):
+            xc, aux_c = carry
+            p_i, c_i = xs
+            xc, c_new, aux = blocks.block_apply(
+                p_i, xc, cfg, _kind, mode=mode, positions=positions,
+                cache=c_i)
+            return (xc, aux_c + aux), c_new
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        (x, aux_total), c_out = jax.lax.scan(
+            body, (x, aux_total), (p_seg, c_seg))
+        if cache_out is not None:
+            cache_out[seg_name(si)] = c_out
+    return x, cache_out, aux_total

@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (RooflineTerms, analyze_compiled,  # noqa: F401
+                                     collective_bytes_from_hlo, roofline_terms)

@@ -1,0 +1,201 @@
+"""Analytic per-cell cost model: exact FLOPs/bytes from the architecture.
+
+Why this exists (EXPERIMENTS.md §Roofline discusses the cross-checks): the
+compiled artifact on the CPU backend has two systematic distortions —
+(a) `cost_analysis()` counts while(scan) bodies once (fixed by the
+trip-count-aware `hlo_costs`), and (b) XLA-CPU widens bf16 dots to f32,
+materializing f32 copies of bf16 tensors (e.g. the KV cache) that a TPU
+would never create. Dot FLOPs and collective bytes parse cleanly from HLO
+text; HBM BYTES do not. This module therefore computes the memory term
+analytically from the model definition — every matmul, attention score,
+cache line and optimizer word, with the AWQ INT4 stream priced at its true
+4.5 bits/weight — and the dry-run records both (analytic + HLO upper bound).
+
+Conventions:
+  * activations bf16 (2B), scores/softmax f32 (4B), master params f32,
+  * weight-only quant: 0.5625 B/weight (INT4 + scales/zeros at GS=64,
+    byte-exact AWQ_MACRO rate) for quantizable linears, fp16 for the rest,
+  * training weight traffic per param: bf16 fwd read + remat re-read + bwd
+    read (3×2B) + f32 grad write+read (8B) + Adam m/v read+write (16B) +
+    f32 master read+write (8B) = 38 B,
+  * per-chip numbers assume the sharding rules' actual placement: tensors
+    whose dims don't divide the mesh axis are counted replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import SHAPES, ShapeCell
+from repro.configs.base import LayerKind, ModelConfig
+
+AWQ_BYTES_PER_W = 4.5 / 8          # byte-exact AWQ_MACRO rate at GS=64
+ACT = 2                            # bf16 activations
+F32 = 4
+
+
+def _linear_dims(cfg: ModelConfig, kind: LayerKind) -> list[tuple[int, int]]:
+    """(K, N) of every linear in one block of this kind (MoE listed once
+    per expert via the 'experts' multiplier below)."""
+    d = cfg.d_model
+    dims: list[tuple[int, int]] = []
+    if kind.mixer in ("attn", "hymba"):
+        dims += [(d, cfg.q_dim), (d, cfg.kv_dim), (d, cfg.kv_dim),
+                 (cfg.q_dim, d)]
+    if kind.mixer == "mla":
+        nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        dims += [(d, cfg.num_heads * (nope + rope)),
+                 (d, cfg.kv_lora_rank + rope),
+                 (cfg.kv_lora_rank, cfg.num_heads * (nope + cfg.v_head_dim)),
+                 (cfg.num_heads * cfg.v_head_dim, d)]
+    if kind.mixer in ("mamba", "hymba"):
+        di, gd, nh = cfg.d_inner, cfg.ssm_ngroups * cfg.ssm_state, \
+            cfg.ssm_nheads
+        dims += [(d, di), (d, di), (d, gd), (d, gd), (d, nh), (di, d)]
+    if kind.mlp == "glu":
+        dims += [(d, cfg.d_ff), (d, cfg.d_ff), (cfg.d_ff, d)]
+    elif kind.mlp == "plain":
+        dims += [(d, cfg.d_ff), (cfg.d_ff, d)]
+    return dims
+
+
+def _moe_dims(cfg: ModelConfig) -> tuple[list[tuple[int, int]],
+                                         list[tuple[int, int]]]:
+    """(per-routed-expert dims, shared/dense-path dims) for a MoE block."""
+    d = cfg.d_model
+    routed = [(d, cfg.moe_d_ff), (d, cfg.moe_d_ff), (cfg.moe_d_ff, d)]
+    shared = []
+    if cfg.num_shared_experts:
+        sf = cfg.shared_d_ff
+        shared = [(d, sf), (d, sf), (sf, d)]
+    shared.append((d, cfg.num_experts))  # router
+    return routed, shared
+
+
+def _quantizable(k: int, n: int, gs: int = 64) -> bool:
+    return k % gs == 0 and n % 8 == 0 and k * n >= 16384
+
+
+@dataclasses.dataclass
+class CellCosts:
+    flops: float = 0.0             # executed matmul+attention flops, global
+    weight_bytes: float = 0.0      # weight traffic per step, global
+    act_bytes: float = 0.0         # activation/score materialization, global
+    cache_bytes: float = 0.0       # KV/state cache traffic per step, global
+    opt_bytes: float = 0.0         # optimizer/grad traffic (train), global
+
+    @property
+    def total_bytes(self) -> float:
+        return (self.weight_bytes + self.act_bytes + self.cache_bytes
+                + self.opt_bytes)
+
+
+def cell_costs(cfg: ModelConfig, cell: ShapeCell, quant: bool) -> CellCosts:
+    """Global per-step costs for one (arch × shape) cell."""
+    b, s = cell.global_batch, cell.seq_len
+    train = cell.step == "train"
+    decode = cell.step == "decode"
+    toks = b if decode else b * s
+    c = CellCosts()
+
+    wq_b = AWQ_BYTES_PER_W if quant else (2 if not train else 38)
+    wfp_b = 2 if not train else 38
+
+    def add_linear(k: int, n: int, tok: float, n_mats: float = 1.0):
+        c.flops += 2.0 * k * n * tok * n_mats
+        c.weight_bytes += k * n * n_mats * \
+            (wq_b if (quant and _quantizable(k, n)) else wfp_b)
+        c.act_bytes += tok * (k + n) * ACT
+
+    kinds = cfg.layer_kinds()
+    for kind in kinds:
+        if kind.mlp == "moe":
+            routed, shared = _moe_dims(cfg)
+            for k, n in routed:
+                # every expert's weights stream once per step; compute only
+                # on the top_k-dispatched share of tokens
+                add_linear(k, n, toks * cfg.top_k / cfg.num_experts,
+                           n_mats=cfg.num_experts)
+            for k, n in shared:
+                add_linear(k, n, toks)
+            dims = [t for t in _linear_dims(cfg, kind)]
+        else:
+            dims = _linear_dims(cfg, kind)
+        for k, n in dims:
+            add_linear(k, n, toks)
+
+        # --- mixer state/score traffic ---
+        if kind.mixer in ("attn", "hymba", "mla"):
+            if kind.mixer == "mla":
+                qk_dim = cfg.num_heads * (cfg.qk_nope_head_dim
+                                          + cfg.qk_rope_head_dim)
+                v_dim = cfg.num_heads * cfg.v_head_dim
+                kv_line = cfg.kv_lora_rank + cfg.qk_rope_head_dim  # latent
+            else:
+                qk_dim = cfg.q_dim
+                v_dim = cfg.q_dim
+                kv_line = 2 * cfg.kv_dim
+            ctx = min(kind.window, s) if kind.window else s
+            # int8 KV cache (§Perf A4): 1 B/elem + f32 scale per (pos, head)
+            kv_byte = (1.0 + F32 / cfg.head_dim) \
+                if (cfg.kv_quant == "int8" and kind.mixer != "mla") else ACT
+            if decode:
+                # read the whole cache line per step + scores
+                c.cache_bytes += b * ctx * kv_line * kv_byte \
+                    + b * kv_line * kv_byte
+                c.flops += 2.0 * b * ctx * (qk_dim + v_dim)
+                c.act_bytes += b * cfg.num_heads * ctx * F32  # probs
+            else:
+                # causal S×ctx scores in f32 (written+read by softmax), ×3
+                # for backward (dS, recompute) when training
+                pairs = (s * ctx / 2) if not kind.window else (s * ctx)
+                pairs = min(pairs, s * s / 2)
+                factor = 3.0 if train else 1.0
+                c.flops += 2.0 * b * pairs * (qk_dim + v_dim) * factor
+                c.act_bytes += 2.0 * b * cfg.num_heads * pairs * F32 * factor
+                if cell.step == "prefill":
+                    c.cache_bytes += b * ctx * kv_line * ACT  # cache write
+        if kind.mixer in ("mamba", "hymba"):
+            nh, hd, ds = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+            if decode:
+                c.cache_bytes += 2.0 * b * nh * hd * ds * F32  # state rw
+                c.flops += 2.0 * 3 * b * nh * hd * ds
+            else:
+                q = min(cfg.ssm_chunk, s)
+                factor = 3.0 if train else 1.0
+                # intra-chunk quadratic + state build/apply
+                c.flops += (2.0 * b * s * q * nh * (ds + hd) / 2
+                            + 4.0 * b * s * nh * hd * ds) * factor
+                c.act_bytes += b * s * nh * (hd + 2 * ds) * F32 * factor
+
+    # --- embeddings / head / loss ---
+    v, d = cfg.vocab_size, cfg.d_model
+    emb_fp = 2 if not train else 38
+    c.weight_bytes += v * d * emb_fp * (2 if not cfg.tie_embeddings
+                                        and not cfg.is_encoder else 1)
+    head_toks = toks if (train or cfg.is_encoder) else b
+    c.flops += 2.0 * v * d * head_toks * (3.0 if train else 1.0)
+    c.act_bytes += head_toks * v * F32 * (2.0 if train else 1.0)  # logits
+
+    if train:
+        n_params = cfg.n_params()
+        c.opt_bytes += 0  # already folded into the 38 B/param weight rate
+        # remat: one extra forward of all matmul flops
+        c.flops *= 4.0 / 3.0
+
+    return c
+
+
+def analytic_terms(cfg: ModelConfig, cell_name: str, chips: int,
+                   quant: bool) -> dict:
+    from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+    cell = SHAPES[cell_name]
+    cc = cell_costs(cfg, cell, quant)
+    return {
+        "analytic_flops_global": cc.flops,
+        "analytic_bytes_global": cc.total_bytes,
+        "analytic_weight_bytes": cc.weight_bytes,
+        "analytic_act_bytes": cc.act_bytes,
+        "analytic_cache_bytes": cc.cache_bytes,
+        "analytic_compute_s": cc.flops / chips / PEAK_FLOPS,
+        "analytic_memory_s": cc.total_bytes / chips / HBM_BW,
+    }

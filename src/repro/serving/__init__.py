@@ -1,0 +1,1 @@
+from repro.serving.engine import GenerationEngine, SamplerConfig  # noqa: F401

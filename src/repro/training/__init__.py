@@ -1,0 +1,2 @@
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.training.train_step import TrainConfig, make_train_step  # noqa: F401

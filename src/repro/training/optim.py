@@ -1,0 +1,88 @@
+"""AdamW in pure JAX (no optax in this container) with ZeRO-1 sharded moments.
+
+Moments live in f32 regardless of param dtype; `zero1_pspec` in
+`distributed.sharding` additionally shards them over the data axis on top of
+the param's TP sharding, which is what makes the optimizer state scale to
+the production mesh (moments are 2× params — the largest training tensor
+after activations).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay → floor."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), \
+        gnorm
+
+
+def adamw_update(params, grads, opt, step: jax.Array, cfg: AdamWConfig):
+    """One AdamW step. grads may be bf16 (compressed DP reduce) — promoted
+    here; params stay in their master dtype."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    return (jax.tree.unflatten(treedef, new_p),
+            {"m": jax.tree.unflatten(treedef, new_m),
+             "v": jax.tree.unflatten(treedef, new_v)},
+            {"grad_norm": gnorm, "lr": lr})

@@ -1,0 +1,69 @@
+"""jit-able train step: mixed-precision backward, optional bf16 gradient
+communication, AdamW, metrics.
+
+Distributed-optimization knobs (DESIGN.md §5):
+  * ``grad_comm_dtype="bfloat16"`` — params are cast to bf16 *before* the
+    loss, so backward (and therefore the implicit DP gradient all-reduce XLA
+    emits over the pod/data axes) runs on bf16 tensors: half the gradient
+    collective bytes. The f32 master copy lives only in the optimizer. The
+    dry-run's collective-bytes parser sees this directly.
+  * activation remat — per-block `jax.checkpoint` (models/stack.py).
+  * ZeRO-1 — moment sharding handled by the caller via
+    `sharding.zero1_pspec` out_shardings.
+  * compute/comm overlap — XLA latency-hiding scheduler; we keep the loss a
+    single fused graph (no host sync points) so the scheduler can overlap
+    the gradient all-reduce of layer i with the backward of layer i-1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    grad_comm_dtype: str = "bfloat16"   # "float32" to disable compression
+
+
+def init_train_state(model, key) -> dict:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_shapes(model) -> dict:
+    """ShapeDtypeStruct train state (for dry-run / checkpoint templates)."""
+    return jax.eval_shape(lambda: init_train_state(model,
+                                                   jax.random.PRNGKey(0)))
+
+
+def make_train_step(model, tcfg: TrainConfig) -> Callable[[dict, dict],
+                                                          tuple[dict, dict]]:
+    comm_dtype = jnp.dtype(tcfg.grad_comm_dtype)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+
+        def loss_fn(p):
+            if comm_dtype != jnp.float32:
+                # bf16 params ⇒ bf16 grads ⇒ bf16 DP all-reduce
+                p = jax.tree.map(
+                    lambda a: a.astype(comm_dtype)
+                    if a.dtype == jnp.float32 and a.ndim >= 2 else a, p)
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state["opt"], state["step"], tcfg.optimizer)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step

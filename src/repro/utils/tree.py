@@ -1,0 +1,62 @@
+"""Path-aware pytree helpers used across the framework.
+
+Params everywhere are nested dicts of ``jnp.ndarray`` (the pure-JAX module
+convention, DESIGN.md §7). Sharding rules, quantization pipelines and
+checkpoint schemas all address leaves by their '/'-joined dict path, so the
+helpers here are the single place that defines that addressing.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    if isinstance(k, jax.tree_util.FlattenedIndexKey):
+        return str(k.key)
+    return str(k)
+
+
+def path_str(path) -> str:
+    """'/'-joined string for a jax key-path."""
+    return "/".join(_key_str(k) for k in path)
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: Any, *rest: Any) -> Any:
+    """``jax.tree_util.tree_map_with_path`` with string paths.
+
+    ``fn(path, leaf, *other_leaves) -> new_leaf``.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x, *r: fn(path_str(p), x, *r), tree, *rest)
+
+
+def flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(path_str(p), v) for p, v in leaves]
+
+
+def leaf_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def leaf_count(tree: Any) -> int:
+    """Total number of scalar elements across all leaves."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape))
+    return total

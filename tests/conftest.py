@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — tests run on the single real device;
+# only launch/dryrun.py (and the dedicated subprocess in test_distributed)
+# request placeholder devices.
+
+
+def make_batch(cfg, b=2, s=64, seed=0, labels=True):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio":
+        out = {"features": jnp.asarray(
+            rng.normal(size=(b, s, cfg.frontend_dim)), jnp.float32)}
+        if labels:
+            out["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        return out
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if labels:
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    if cfg.frontend == "vision":
+        out["images"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.frontend_dim)),
+            jnp.float32)
+    return out
+
+
+@pytest.fixture(autouse=True)
+def _reset_exec_config():
+    from repro.core.qlinear import set_execution_config
+    set_execution_config(impl="auto", compute_dtype=jnp.bfloat16,
+                         offload_min_flops=2 ** 20)
+    yield
+    set_execution_config(impl="auto", compute_dtype=jnp.bfloat16,
+                         offload_min_flops=2 ** 20)

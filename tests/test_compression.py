@@ -1,0 +1,95 @@
+"""int8+EF gradient compression: unit properties + multi-device parity.
+
+The multi-device test runs in a subprocess with 8 placeholder devices
+(same pattern as test_distributed.py).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import quantize_ef
+
+
+def test_quantize_ef_residual_bound():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    ef = jnp.zeros((256,))
+    scale = jnp.max(jnp.abs(g)) / 127.0
+    q, ef1 = quantize_ef(g, ef, scale)
+    # residual per element ≤ scale/2; codes in range
+    assert float(jnp.abs(ef1).max()) <= float(scale) / 2 + 1e-7
+    assert int(jnp.abs(q).max()) <= 127
+
+
+def test_error_feedback_accumulates_unbiased():
+    """Repeatedly sending the same gradient: mean of dequantized sends →
+    the true gradient (EF cancels systematic rounding)."""
+    g = jax.random.normal(jax.random.PRNGKey(1), (128,)) * 1e-3
+    scale = jnp.asarray(0.01)  # coarse scale: heavy quantization
+    ef = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    n = 50
+    for _ in range(n):
+        q, ef = quantize_ef(g, ef, scale)
+        sent += q.astype(jnp.float32) * scale
+    np.testing.assert_allclose(np.asarray(sent / n), np.asarray(g),
+                               atol=float(scale) / 2 / n + 1e-6)
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+import repro.configs as C
+from repro.models import build_model
+from repro.data import make_dataset
+from repro.training.optim import AdamWConfig
+from repro.training.dp_compressed import (init_dp_state, make_dp_train_step)
+
+cfg = C.get_smoke_config("qwen25-05b")
+m = build_model(cfg)
+mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
+opt = AdamWConfig(lr=3e-3, warmup_steps=2, decay_steps=60, weight_decay=0.0)
+ds = make_dataset(cfg, 8, 64)
+
+results = {}
+for compress in (False, True):
+    state, ef = init_dp_state(m, jax.random.PRNGKey(0), mesh)
+    step = make_dp_train_step(m, mesh, opt, compress=compress)
+    losses = []
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(i).items()}
+        state, ef, metrics = step(state, ef, batch)
+        losses.append(float(metrics["loss"]))
+    results["int8ef" if compress else "f32"] = losses
+    if compress:
+        efn = float(sum(jnp.sum(jnp.abs(x)) for x in jax.tree.leaves(ef)))
+        results["ef_nonzero"] = efn > 0
+
+f32, q8 = results["f32"], results["int8ef"]
+assert f32[-1] < f32[0] - 0.3, f32
+assert q8[-1] < q8[0] - 0.3, q8
+assert abs(q8[-1] - f32[-1]) < 0.15, (q8[-1], f32[-1])
+assert results["ef_nonzero"]
+print("RESULT:" + json.dumps({"f32_last": f32[-1], "int8_last": q8[-1]}))
+"""
+
+
+@pytest.mark.slow
+def test_int8_ef_training_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+    assert line, proc.stdout
+    res = json.loads(line[0][len("RESULT:"):])
+    assert res["int8_last"] < 6.1

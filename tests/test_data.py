@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, resume, sharding, signal."""
+import numpy as np
+
+import repro.configs as C
+from repro.data import make_dataset
+
+
+def test_batch_pure_function_of_seed_step():
+    cfg = C.get_smoke_config("qwen25-05b")
+    ds1 = make_dataset(cfg, 4, 64, seed=7)
+    ds2 = make_dataset(cfg, 4, 64, seed=7)
+    for step in (0, 5, 1000):
+        b1, b2 = ds1.batch_at(step), ds2.batch_at(step)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k])
+    assert not np.array_equal(ds1.batch_at(0)["tokens"],
+                              ds1.batch_at(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    cfg = C.get_smoke_config("qwen25-05b")
+    b = make_dataset(cfg, 2, 32).batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_stream_is_compressible():
+    """Next-token entropy must be below uniform (training signal exists)."""
+    cfg = C.get_smoke_config("qwen25-05b")
+    b = make_dataset(cfg, 16, 256).batch_at(0)
+    toks, labels = b["tokens"], b["labels"]
+    pred = (toks.astype(np.int64) * 31 + 7) % min(cfg.vocab_size, 4096)
+    acc = (pred == labels).mean()
+    assert acc > 0.5  # deterministic transition hit ~90% of the time
+
+
+def test_host_slice_partitions():
+    cfg = C.get_smoke_config("qwen25-05b")
+    ds = make_dataset(cfg, 8, 16)
+    b = ds.batch_at(0)
+    parts = [ds.host_slice(b, h, 4) for h in range(4)]
+    recon = np.concatenate([p["tokens"] for p in parts], axis=0)
+    np.testing.assert_array_equal(recon, b["tokens"])
+
+
+def test_modalities():
+    cfg = C.get_smoke_config("hubert-xlarge")
+    b = make_dataset(cfg, 2, 32).batch_at(0)
+    assert b["features"].shape == (2, 32, cfg.frontend_dim)
+    cfg = C.get_smoke_config("phi-3-vision-4.2b")
+    b = make_dataset(cfg, 2, 32).batch_at(0)
+    assert b["images"].shape == (2, cfg.num_patches, cfg.frontend_dim)

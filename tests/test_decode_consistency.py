@@ -1,0 +1,79 @@
+"""Decode path ≡ parallel forward: the strongest cache/RoPE/ring/SSD check.
+
+Per-arch tolerance: bf16 activations; MLA's absorbed decode is a different
+(mathematically equal) contraction order, so its bf16 rounding differs more
+(verified exact in f32 — see EXPERIMENTS.md §Validation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+
+TOL = {"deepseek-v2-lite-16b": 1e-1, "phi-3-vision-4.2b": 5e-2}
+B, S_PRE, S_DEC = 2, 40, 20  # decode crosses the smoke window (32)
+
+
+@pytest.mark.parametrize("arch", [a for a in C.list_archs()
+                                  if not C.get_smoke_config(a).is_encoder])
+def test_decode_matches_forward(arch):
+    cfg = C.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S_PRE + S_DEC)),
+                       jnp.int32)
+    batch = {"tokens": toks[:, :S_PRE]}
+    if cfg.frontend == "vision":
+        batch["images"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.frontend_dim)),
+            jnp.float32)
+    full = dict(batch)
+    full["tokens"] = toks
+    ref = jax.jit(m.forward_logits)(params, full)
+    cache = m.init_cache(B, 128)
+    cache, logits, pos = jax.jit(m.prefill)(params, batch, cache)
+    off = cfg.num_patches if cfg.frontend == "vision" else 0
+    tol = TOL.get(arch, 3e-2)
+    errs = [float(jnp.abs(logits - ref[:, off + S_PRE - 1]).max())]
+    dstep = jax.jit(m.decode_step)
+    for t in range(S_DEC):
+        logits, cache = dstep(params, cache, toks[:, S_PRE + t], pos)
+        pos = pos + 1
+        errs.append(float(jnp.abs(logits - ref[:, off + S_PRE + t]).max()))
+    assert max(errs) < tol, (arch, max(errs))
+
+
+def test_mla_absorbed_decode_exact_in_f32():
+    import dataclasses
+    cfg = dataclasses.replace(C.get_smoke_config("deepseek-v2-lite-16b"),
+                              activation_dtype="float32")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 48)), jnp.int32)
+    ref = jax.jit(m.forward_logits)(params, {"tokens": toks})
+    cache = m.init_cache(B, 128, dtype=jnp.float32)
+    cache, logits, pos = jax.jit(m.prefill)(
+        params, {"tokens": toks[:, :40]}, cache)
+    errs = [float(jnp.abs(logits - ref[:, 39]).max())]
+    dstep = jax.jit(m.decode_step)
+    for t in range(8):
+        logits, cache = dstep(params, cache, toks[:, 40 + t], pos)
+        pos = pos + 1
+        errs.append(float(jnp.abs(logits - ref[:, 40 + t]).max()))
+    assert max(errs) < 1e-4, errs
+
+
+def test_ring_buffer_positions():
+    from repro.models.attention import _ring_positions
+    pos = jnp.asarray([5, 8, 40])
+    kp = np.asarray(_ring_positions(pos, 8))
+    # slot s holds newest p ≤ pos with p ≡ s (mod 8); unwritten → negative
+    assert kp[0, 5] == 5 and kp[0, 6] == -2  # pos 5: slot 6 unwritten
+    assert kp[1, 0] == 8 and kp[1, 1] == 1
+    assert (kp[2] > 32).all()                # full window at pos 40
+    for s in range(8):
+        assert kp[2, s] % 8 == s

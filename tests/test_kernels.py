@@ -1,0 +1,83 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packing import pack_linear
+from repro.core.quantize import QuantConfig, quantize_groupwise
+from repro.kernels.ops import awq_gateup, awq_matmul, choose_blocks
+from repro.kernels.ref import awq_gateup_ref, awq_matmul_ref
+
+
+def _packed(k, n, gs, seed=0, scale=0.1):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    cfg = QuantConfig(group_size=gs)
+    q, s, z = quantize_groupwise(w, cfg)
+    return pack_linear(q, s, z, None, None, cfg)
+
+
+# shape sweep: decode GEMV (m small), prefill GEMM, non-128 N, multi-group K
+SHAPES = [
+    (1, 128, 128, 64),     # single-token GEMV
+    (8, 256, 384, 64),
+    (24, 448, 136, 64),    # N % 128 != 0 (bn=8 path), K=7 groups
+    (128, 512, 256, 128),  # GS=128
+    (100, 256, 128, 64),   # M needs padding
+]
+
+
+@pytest.mark.parametrize("m,k,n,gs", SHAPES)
+def test_awq_matmul_matches_ref(m, k, n, gs):
+    p = _packed(k, n, gs)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    ref = awq_matmul_ref(x, p.qweight, p.scales, p.zeros, gs)
+    out = awq_matmul(x, p, compute_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 2e-2)])
+def test_awq_matmul_dtypes(dtype, rtol):
+    p = _packed(256, 256, 64)
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, 256))
+    ref = awq_matmul_ref(x, p.qweight, p.scales, p.zeros, 64,
+                         compute_dtype=dtype)
+    out = awq_matmul(x, p, compute_dtype=dtype, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=rtol, atol=rtol)
+
+
+def test_awq_gateup_matches_ref():
+    g = _packed(256, 384, 64, seed=1)
+    u = _packed(256, 384, 64, seed=2)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 256))
+    ref = awq_gateup_ref(x, g.qweight, g.scales, g.zeros, u.qweight,
+                         u.scales, u.zeros, 64)
+    out = awq_gateup(x, g, u, compute_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_choose_blocks_invariants():
+    for m, k, n, gs in [(1, 896, 4864, 64), (128, 4096, 13696, 64),
+                        (8, 2048, 16384, 128), (300, 448, 136, 64)]:
+        bm, bn, bk = choose_blocks(m, k, n, gs)
+        assert bk % gs == 0 and k % bk == 0
+        assert n % bn == 0
+        assert bm % 8 == 0
+        # VMEM budget: one grid step's working set under 8 MB
+        vmem = bm * bk * 4 + bk // 8 * bn * 4 + 2 * bk // gs * bn * 4 \
+            + bm * bn * 4
+        assert vmem < 8 * 2 ** 20
+
+
+def test_kernel_grid_covers_multiple_k_blocks():
+    # K = 2048 with bk ≤ 1024 forces accumulation across the K grid axis
+    p = _packed(2048, 128, 64, scale=0.05)
+    x = jax.random.normal(jax.random.PRNGKey(11), (8, 2048)) * 0.3
+    ref = awq_matmul_ref(x, p.qweight, p.scales, p.zeros, 64)
+    out = awq_matmul(x, p, compute_dtype=jnp.float32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,54 @@
+"""INT8 KV-cache quantization (§Perf A4): correctness + cost accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models import build_model
+from repro.models.attention import _kv_dequant, _kv_quantize
+
+
+def test_kv_quantize_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 64)) * 3.0
+    q, s = _kv_quantize(x)
+    xr = _kv_dequant(q, s, jnp.float32)
+    err = jnp.abs(xr - x)
+    # per-row error ≤ scale/2
+    assert bool(jnp.all(err <= s[..., None] * 0.5 + 1e-6))
+    # zero rows stay exact
+    q0, s0 = _kv_quantize(jnp.zeros((2, 2, 8)))
+    assert float(jnp.abs(_kv_dequant(q0, s0, jnp.float32)).max()) == 0.0
+
+
+def test_kv_int8_decode_matches_forward():
+    cfg = dataclasses.replace(C.get_smoke_config("qwen25-05b"),
+                              kv_quant="int8")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 56)), jnp.int32)
+    ref = jax.jit(m.forward_logits)(params, {"tokens": toks})
+    cache = m.init_cache(2, 128)
+    assert cache["seg_0"]["kv"]["k"].dtype == jnp.int8
+    cache, logits, pos = jax.jit(m.prefill)(
+        params, {"tokens": toks[:, :40]}, cache)
+    errs = [float(jnp.abs(logits - ref[:, 39]).max())]
+    dstep = jax.jit(m.decode_step)
+    for t in range(16):
+        logits, cache = dstep(params, cache, toks[:, 40 + t], pos)
+        pos = pos + 1
+        errs.append(float(jnp.abs(logits - ref[:, 40 + t]).max()))
+    assert max(errs) < 6e-2, errs
+
+
+def test_kv_int8_costmodel_reduction():
+    from repro.configs import SHAPES
+    from repro.roofline.costmodel import cell_costs
+    cfg = C.get_config("qwen25-05b")
+    cfg8 = dataclasses.replace(cfg, kv_quant="int8")
+    a = cell_costs(cfg, SHAPES["decode_32k"], quant=True)
+    b = cell_costs(cfg8, SHAPES["decode_32k"], quant=True)
+    assert b.cache_bytes < 0.55 * a.cache_bytes  # ~1.9× fewer cache bytes
+    assert b.weight_bytes == a.weight_bytes

@@ -1,0 +1,79 @@
+"""Per-arch smoke: reduced config, one loss + prefill + decode step on CPU,
+output shapes + finiteness (assignment requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+from tests.conftest import make_batch
+
+ARCHS = list(C.list_archs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_loss_finite(arch):
+    cfg = C.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    loss, metrics = jax.jit(m.loss)(params, make_batch(cfg))
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_shapes(arch):
+    cfg = C.get_smoke_config(arch)
+    if cfg.is_encoder:
+        pytest.skip("encoder-only: no decode step")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, labels=False, s=32)
+    cache = m.init_cache(2, 128)
+    cache, logits, pos = jax.jit(m.prefill)(params, batch, cache)
+    assert logits.shape == (2, cfg.vocab_size)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = jax.jit(m.decode_step)(params, cache, tok, pos)
+    assert logits2.shape == (2, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_grad_finite(arch):
+    cfg = C.get_smoke_config(arch)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    g = jax.jit(jax.grad(lambda p, b: m.loss(p, b)[0]))(
+        params, make_batch(cfg, s=32))
+    gn = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                            for x in jax.tree.leaves(g))))
+    assert np.isfinite(gn) and gn > 0
+
+
+def test_layer_kind_segments():
+    cfg = C.get_config("gemma3-4b")
+    segs = cfg.segments()
+    # 5:1 pattern: [(local,5),(global,1)]×5 + (local,4) = 11 segments
+    assert len(segs) == 11
+    assert sum(n for _, n in segs) == 34
+    assert segs[1][0].is_global and segs[1][1] == 1
+    cfg = C.get_config("hymba-1.5b")
+    segs = cfg.segments()
+    assert [n for _, n in segs] == [1, 14, 1, 15, 1]
+    cfg = C.get_config("deepseek-v2-lite-16b")
+    assert [k.mlp for k, _ in cfg.segments()] == ["glu", "moe"]
+
+
+def test_param_counts_match_published_scale():
+    """Analytic n_params within tolerance of the published sizes."""
+    expected = {
+        "gemma-2b": 2.5e9, "gemma3-4b": 4.3e9, "glm4-9b": 9.4e9,
+        "smollm-360m": 3.6e8, "qwen2-moe-a2.7b": 14.3e9,
+        "deepseek-v2-lite-16b": 15.7e9,  # model-card total (the "-16b")
+        "hymba-1.5b": 1.5e9, "hubert-xlarge": 9.6e8, "mamba2-130m": 1.3e8,
+        "phi-3-vision-4.2b": 3.8e9, "qwen25-05b": 4.9e8,
+    }
+    for arch, exp in expected.items():
+        n = C.get_config(arch).n_params()
+        assert 0.5 * exp < n < 1.6 * exp, (arch, n, exp)

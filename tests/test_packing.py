@@ -1,0 +1,67 @@
+"""Packing: int32 nibble layout + byte-exact AWQ_MACRO serialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (awq_macro_bytes, awq_macro_nbytes,
+                                pack_int4, packed_linear_nbytes,
+                                parse_awq_macro_bytes, unpack_int4)
+
+
+def test_pack_unpack_exact():
+    q = jax.random.randint(jax.random.PRNGKey(0), (128, 24), 0, 16)
+    assert bool(jnp.all(unpack_int4(pack_int4(q)) == q))
+
+
+def test_nibble_order_matches_paper_unpack_unit():
+    # nibble j of word w holds row w*8+j (shift/mask order, Fig. 4b)
+    q = jnp.arange(16).reshape(16, 1) % 16
+    packed = np.asarray(pack_int4(q))
+    assert packed.shape == (2, 1)
+    w0 = int(np.uint32(packed[0, 0]))
+    for j in range(8):
+        assert (w0 >> (4 * j)) & 0xF == j
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_property_pack_roundtrip(k8, n, seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (8 * k8, n), 0, 16)
+    assert bool(jnp.all(unpack_int4(pack_int4(q)) == q))
+
+
+def test_awq_macro_bytes_rate():
+    # paper layout: GS=64 → 4.5 bits/weight exactly
+    assert awq_macro_nbytes(64) == 64 * 4 + 16 + 16
+    nbytes = packed_linear_nbytes(896, 4864, 64)
+    bits_per_w = nbytes * 8 / (896 * 4864)
+    assert abs(bits_per_w - 4.5) < 1e-9
+
+
+def test_awq_macro_serialization_roundtrip():
+    rng = np.random.default_rng(0)
+    k, n, gs = 128, 16, 64
+    q = rng.integers(0, 16, (k, n)).astype(np.uint8)
+    s = rng.random((k // gs, n)).astype(np.float16)
+    z = rng.integers(0, 16, (k // gs, n)).astype(np.uint8)
+    buf = awq_macro_bytes(q, s, z, gs)
+    assert len(buf) == packed_linear_nbytes(k, n, gs)
+    q2, s2, z2 = parse_awq_macro_bytes(buf, k, n, gs)
+    np.testing.assert_array_equal(q, q2)
+    np.testing.assert_array_equal(z, z2)
+    np.testing.assert_array_equal(s, s2)
+
+
+def test_zeros_strip_padding():
+    """The 96-bit padding of the zeros strip is all zero bytes (§III-A)."""
+    k, n, gs = 64, 8, 64
+    q = np.zeros((k, n), np.uint8)
+    s = np.ones((1, n), np.float16)
+    z = np.full((1, n), 15, np.uint8)
+    buf = awq_macro_bytes(q, s, z, gs)
+    macro = buf[:awq_macro_nbytes(gs)]
+    zeros_strip = macro[gs * 4 + 16:]
+    assert len(zeros_strip) == 16
+    assert zeros_strip[:4] == b"\xff" * 4     # 8 × INT4 zeros = 15
+    assert zeros_strip[4:] == b"\x00" * 12    # 96-bit padding

@@ -1,0 +1,77 @@
+"""Unit + property tests for the AWQ quantization numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (QuantConfig, dequantize_groupwise,
+                                 fake_quantize, quantize_groupwise)
+
+
+def test_roundtrip_error_bound():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 64))
+    cfg = QuantConfig(group_size=64)
+    q, s, z = quantize_groupwise(w, cfg)
+    wd = dequantize_groupwise(q, s, z, cfg)
+    # RTN error per element ≤ scale/2 within its group
+    err = jnp.abs(wd - w)
+    bound = jnp.repeat(s, cfg.group_size, axis=0) * 0.5 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+def test_codes_in_range():
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 32)) * 5
+    q, s, z = quantize_groupwise(w, QuantConfig(group_size=64))
+    assert int(q.min()) >= 0 and int(q.max()) <= 15
+    assert int(z.min()) >= 0 and int(z.max()) <= 15
+
+
+def test_symmetric_mode():
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 16))
+    cfg = QuantConfig(group_size=64, sym=True)
+    q, s, z = quantize_groupwise(w, cfg)
+    assert bool(jnp.all(z == 8))
+
+
+def test_group_size_divisibility_check():
+    with pytest.raises(ValueError):
+        quantize_groupwise(jnp.zeros((100, 8)), QuantConfig(group_size=64))
+
+
+def test_constant_rows_stable():
+    # zero-width range → fallback scale 1.0 (AutoAWQ convention): error ≤ 0.5
+    w = jnp.ones((64, 8)) * 3.7
+    wq = fake_quantize(w, QuantConfig(group_size=64))
+    assert float(jnp.abs(wq - w).max()) <= 0.5
+    # all-zero rows are exact
+    wz = fake_quantize(jnp.zeros((64, 8)), QuantConfig(group_size=64))
+    assert float(jnp.abs(wz).max()) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.floats(0.01, 10.0),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_quant_error_bound(groups, n_over_8, scale, seed):
+    """∀ w: |dequant(quant(w)) − w| ≤ scale/2 per group (hypothesis)."""
+    gs = 64
+    k, n = groups * gs, n_over_8 * 8
+    w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
+    cfg = QuantConfig(group_size=gs)
+    q, s, z = quantize_groupwise(w, cfg)
+    wd = dequantize_groupwise(q, s, z, cfg)
+    err = np.asarray(jnp.abs(wd - w))
+    bound = np.repeat(np.asarray(s), gs, axis=0) * 0.5 + 1e-5
+    assert (err <= bound).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_fake_quant_idempotent(seed):
+    """Quantizing an already-quantized weight is exact (fixed point)."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8))
+    cfg = QuantConfig(group_size=64)
+    w1 = fake_quantize(w, cfg)
+    w2 = fake_quantize(w1, cfg)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
+                               rtol=1e-5, atol=1e-6)

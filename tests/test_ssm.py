@@ -1,0 +1,94 @@
+"""Mamba-2 SSD: chunked algorithm ≡ naive recurrence oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models import ssm
+
+
+def _naive_ssd(x, bh, ch, dt, a_log, d_skip):
+    """Direct per-step recurrence (the definition, O(S) python loop)."""
+    b, s, nh, hd = x.shape
+    ds = bh.shape[-1]
+    h = np.zeros((b, nh, hd, ds), np.float64)
+    y = np.zeros_like(np.asarray(x, np.float64))
+    a = -np.exp(np.asarray(a_log, np.float64))
+    for t in range(s):
+        da = np.exp(np.asarray(dt[:, t], np.float64) * a)      # [B,nh]
+        h = h * da[:, :, None, None] + np.einsum(
+            "bh,bhs,bhd->bhds", np.asarray(dt[:, t], np.float64),
+            np.asarray(bh[:, t], np.float64), np.asarray(x[:, t], np.float64))
+        y[:, t] = np.einsum("bhds,bhs->bhd", h, np.asarray(ch[:, t],
+                                                           np.float64))
+    y += np.asarray(x, np.float64) * np.asarray(d_skip)[None, None, :, None]
+    return y
+
+
+def test_ssd_chunked_matches_naive_recurrence():
+    cfg = dataclasses.replace(C.get_smoke_config("mamba2-130m"), ssm_chunk=8)
+    b, s = 2, 32
+    nh, hd, ds = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, hd))
+    bh = jax.random.normal(ks[1], (b, s, nh, ds)) * 0.5
+    ch = jax.random.normal(ks[2], (b, s, nh, ds)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, nh)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, nh))
+    d_skip = jnp.ones((nh,))
+
+    # run the chunked path by calling the mixer internals directly
+    q = cfg.ssm_chunk
+    nc = s // q
+    da = dt * (-jnp.exp(a_log))[None, None, :]
+    xc = x.reshape(b, nc, q, nh, hd)
+    bc = bh.reshape(b, nc, q, nh, ds)
+    cc = ch.reshape(b, nc, q, nh, ds)
+    dac = da.reshape(b, nc, q, nh)
+    dtc = dt.reshape(b, nc, q, nh)
+    seg = jnp.cumsum(dac, axis=2)
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    li = jnp.where(causal[None, None, :, :, None], li, -1e30)
+    scores = jnp.einsum("bnihs,bnjhs->bnijh", cc, bc) * jnp.exp(li) \
+        * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bnijh,bnjhd->bnihd", scores, xc)
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)
+    state_c = jnp.einsum("bnjhs,bnjh,bnjhd->bnhds", bc, dtc * decay_to_end,
+                         xc)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])
+
+    def scan_body(h, inp):
+        st, dec = inp
+        return h * dec[:, :, None, None] + st, h
+
+    h0 = jnp.zeros((b, nh, hd, ds))
+    _, h_prev = jax.lax.scan(scan_body, h0,
+                             (jnp.moveaxis(state_c, 1, 0),
+                              jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)
+    y_inter = jnp.einsum("bnihs,bnhds->bnihd",
+                         cc * jnp.exp(seg)[..., None], h_prev)
+    y = (y_intra + y_inter).reshape(b, s, nh, hd) \
+        + x * d_skip[None, None, :, None]
+
+    y_ref = _naive_ssd(x, bh, ch, dt, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(y, np.float64), y_ref,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_decode_matches_mixer():
+    """One-token recurrent decode ≡ last step of the full mixer."""
+    cfg = C.get_smoke_config("mamba2-130m")
+    p = ssm.ssm_init(jax.random.PRNGKey(0), cfg)
+    x_seq = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                              jnp.float32) * 0.5
+    y_full = ssm.ssm_mixer(p, x_seq, cfg)
+    cache = ssm.init_ssm_cache(cfg, 2)
+    for t in range(16):
+        y_t, cache = ssm.ssm_decode(p, cache, x_seq[:, t], cfg)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_full[:, -1]),
+                               rtol=5e-3, atol=5e-3)

@@ -1,0 +1,80 @@
+"""Training substrate: descent, schedule, clipping, bf16 grad-comm parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.data import make_dataset
+from repro.models import build_model
+from repro.training import AdamWConfig, TrainConfig, make_train_step
+from repro.training.optim import clip_by_global_norm, lr_at
+from repro.training.train_step import init_train_state
+
+
+def test_loss_descends_on_markov_stream():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    state = init_train_state(m, jax.random.PRNGKey(0))
+    tc = TrainConfig(optimizer=AdamWConfig(lr=3e-3, warmup_steps=2,
+                                           decay_steps=200,
+                                           weight_decay=0.0))
+    step = jax.jit(make_train_step(m, tc))
+    ds = make_dataset(cfg, 8, 64)
+    losses = []
+    for i in range(20):
+        state, metrics = step(state, {k: jnp.asarray(v)
+                                      for k, v in ds.batch_at(i).items()})
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(lr_at(cfg, jnp.asarray(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, jnp.asarray(55))) < 1e-3
+    assert abs(float(lr_at(cfg, jnp.asarray(100))) - 1e-4) < 1e-8
+
+
+def test_grad_clip():
+    g = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert abs(float(norm) - np.sqrt(10) * 100) < 1e-2
+
+
+def test_bf16_grad_comm_close_to_f32():
+    """bf16 gradient communication (compression) stays close to the f32
+    baseline over a few steps."""
+    cfg = C.get_smoke_config("smollm-360m")
+    m = build_model(cfg)
+    ds = make_dataset(cfg, 4, 32)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1, decay_steps=50,
+                      weight_decay=0.0)
+    outs = {}
+    for dt in ("float32", "bfloat16"):
+        state = init_train_state(m, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(m, TrainConfig(
+            optimizer=opt, grad_comm_dtype=dt)))
+        for i in range(5):
+            state, metrics = step(state, {k: jnp.asarray(v) for k, v in
+                                          ds.batch_at(i).items()})
+        outs[dt] = float(metrics["loss"])
+    assert abs(outs["bfloat16"] - outs["float32"]) < 0.05
+
+
+def test_zero1_pspec_adds_data_axis():
+    import os, subprocess, sys
+    # needs a multi-device mesh — covered in test_distributed.py; here just
+    # check the pure function against a fake mesh via jax.sharding API
+    from repro.distributed.sharding import zero1_pspec
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        shape = {"data": 4, "model": 2}
+        axis_names = ("data", "model")
+    spec = zero1_pspec(P(None, "model"), (64, 8), FakeMesh())
+    assert spec == P("data", "model")
+    spec = zero1_pspec(P(None, None), (3, 8), FakeMesh())  # 3 % 4 != 0
+    assert spec == P(None, "data")

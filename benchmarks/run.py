@@ -18,12 +18,13 @@ def main() -> None:
     rows: list[tuple[str, str, str]] = []
     from benchmarks import (bench_accuracy, bench_compression,
                             bench_kernels, bench_latency_breakdown,
-                            bench_throughput)
+                            bench_serving, bench_throughput)
     modules = [
         ("latency_breakdown", bench_latency_breakdown),
         ("compression", bench_compression),
         ("accuracy", bench_accuracy),
         ("throughput", bench_throughput),
+        ("serving", bench_serving),
         ("kernels", bench_kernels),
     ]
     failures = []

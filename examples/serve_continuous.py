@@ -1,0 +1,69 @@
+"""Continuous-batching serving demo: submit / step / collect streaming.
+
+A tiny qwen2.5-style model serves a burst of mixed-size requests through
+the paged-KV continuous-batching engine:
+
+  * requests are submitted with their own token budgets and sampling
+    params (greedy and temperature rows share one decode batch),
+  * `step()` returns `(request_id, token)` stream events as they are
+    produced — this is the hook a real frontend would forward to clients,
+  * finished requests are evicted mid-flight and their KV pages + batch
+    slot immediately reused by queued work.
+
+Run:  PYTHONPATH=src python examples/serve_continuous.py
+"""
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import build_model
+from repro.serving import GenerationEngine, SamplerConfig
+
+
+def main():
+    cfg = configs.get_smoke_config("qwen25-05b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = GenerationEngine(model, params, max_seq=64,
+                           num_slots=4, page_size=8)
+
+    rng = np.random.default_rng(0)
+    specs = [  # (prompt_len, max_new_tokens, temperature)
+        (5, 12, 0.0), (11, 4, 0.0), (8, 20, 0.8), (16, 6, 0.0),
+        (7, 9, 0.0), (13, 16, 1.2), (4, 5, 0.0), (9, 8, 0.0),
+    ]
+    rid_meta = {}
+    for n, max_new, temp in specs:
+        prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        rid = eng.submit(prompt, max_new,
+                         sampler=SamplerConfig(temperature=temp))
+        rid_meta[rid] = (n, max_new, temp)
+        print(f"submitted rid={rid}  prompt={n} tok  budget={max_new}"
+              f"  T={temp}")
+
+    print("\n--- streaming ---")
+    streams: dict[int, list[int]] = {rid: [] for rid in rid_meta}
+    step = 0
+    while not eng.idle:
+        events = eng.step()
+        step += 1
+        for rid, tok in events:
+            streams[rid].append(tok)
+        line = " ".join(f"r{rid}:{tok}" for rid, tok in events)
+        print(f"step {step:2d}  [{eng.num_active} active]  {line}")
+
+    print("\n--- finished ---")
+    for rid, toks in eng.collect().items():
+        n, max_new, temp = rid_meta[rid]
+        print(f"rid={rid}  T={temp}  {len(toks)}/{max_new} tokens: "
+              f"{[int(t) for t in toks]}")
+
+    st = eng.scheduler_stats
+    util = st.slot_tokens / max(st.slot_steps, 1)
+    print(f"\n{st.decode_steps} decode dispatches for {st.finished} "
+          f"requests; slot utilization {util:.0%}")
+
+
+if __name__ == "__main__":
+    main()

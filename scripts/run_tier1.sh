@@ -1,0 +1,75 @@
+#!/usr/bin/env bash
+# Tier-1 regression gate: per-file timeouts, JUnit XML, machine-checkable
+# failure counts vs. the recorded baseline.
+#
+#   scripts/run_tier1.sh [results_dir]
+#
+# Runs every tests/test_*.py in its own pytest process under a timeout (one
+# hanging file must not sink the whole gate), writes per-file JUnit XML into
+# results_dir (default results/tier1), then prints a summary line
+#
+#   TIER1 files=<n> passed=<p> failed=<f> errors=<e> skipped=<s> timeout=<t>
+#
+# and exits non-zero if failures+errors+timeouts exceed the baseline in
+# scripts/tier1_baseline.txt (tracked in git — update it deliberately when
+# the known-red set changes; override with TIER1_BASELINE_FILE).
+set -u
+cd "$(dirname "$0")/.."
+
+RESULTS_DIR="${1:-results/tier1}"
+PER_FILE_TIMEOUT="${TIER1_TIMEOUT:-600}"
+BASELINE_FILE="${TIER1_BASELINE_FILE:-scripts/tier1_baseline.txt}"
+mkdir -p "$RESULTS_DIR"
+rm -f "$RESULTS_DIR"/*.xml "$RESULTS_DIR"/*.log   # never count a stale run
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+timeouts=0
+for f in tests/test_*.py; do
+    name=$(basename "$f" .py)
+    timeout "$PER_FILE_TIMEOUT" python -m pytest -q "$f" \
+        --junitxml="$RESULTS_DIR/$name.xml" >"$RESULTS_DIR/$name.log" 2>&1
+    rc=$?
+    if [ "$rc" -eq 124 ]; then
+        echo "TIMEOUT $f (>${PER_FILE_TIMEOUT}s)"
+        timeouts=$((timeouts + 1))
+    fi
+done
+
+python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" <<'PY'
+import glob
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+results_dir, timeouts, baseline_path = (sys.argv[1], int(sys.argv[2]),
+                                        sys.argv[3])
+tests = passed = failed = errors = skipped = files = 0
+for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
+    files += 1
+    suite = ET.parse(path).getroot()
+    if suite.tag == "testsuites":
+        suite = suite.find("testsuite")
+    t = int(suite.get("tests", 0))
+    f = int(suite.get("failures", 0))
+    e = int(suite.get("errors", 0))
+    s = int(suite.get("skipped", 0))
+    tests += t
+    failed += f
+    errors += e
+    skipped += s
+    passed += t - f - e - s
+red = failed + errors + timeouts
+print(f"TIER1 files={files} passed={passed} failed={failed} "
+      f"errors={errors} skipped={skipped} timeout={timeouts}")
+
+if not os.path.exists(baseline_path):
+    with open(baseline_path, "w") as fh:
+        fh.write(f"{red}\n")
+    print(f"baseline recorded: red={red}")
+    sys.exit(1 if red else 0)
+baseline = int(open(baseline_path).read().strip())
+if red > baseline:
+    print(f"REGRESSION: red={red} > baseline={baseline}")
+    sys.exit(1)
+print(f"ok: red={red} <= baseline={baseline}")
+PY

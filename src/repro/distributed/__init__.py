@@ -1,3 +1,3 @@
 from repro.distributed.sharding import (  # noqa: F401
     batch_axes, cache_pspec, constrain, current_mesh, make_sharding,
-    param_pspec, pspec_tree, use_mesh)
+    param_pspec, pspec_tree, shard_map, use_mesh)

@@ -301,3 +301,22 @@ def make_sharding(tree: Any, mesh: Mesh, rule, cfg=None) -> Any:
     return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
                         pspec_tree(tree, mesh, rule, cfg),
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# shard_map compat
+# ---------------------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """`jax.shard_map` on new jax, `jax.experimental.shard_map` on old.
+
+    The replication-check kwarg was renamed `check_rep` → `check_vma` across
+    the move; callers use the new name and we translate when falling back.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as sm_old
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return sm_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

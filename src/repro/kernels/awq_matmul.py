@@ -33,6 +33,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.packing import PACK
+from repro.utils.compat import CompilerParams as _CompilerParams
 
 
 def _unpack_dequant(qw_block, s_block, z_block, block_k: int, block_n: int,
@@ -111,7 +112,7 @@ def awq_matmul_pallas(x: jax.Array, qweight: jax.Array, scales: jax.Array,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, qweight, scales, zeros)
 
@@ -177,6 +178,6 @@ def awq_gateup_pallas(x, qw_gate, s_gate, z_gate, qw_up, s_up, z_up, *,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
                         pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x, qw_gate, s_gate, z_gate, qw_up, s_up, z_up)

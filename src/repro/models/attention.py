@@ -232,6 +232,75 @@ def fill_cache_from_prefill(cache, k, v, positions, window: int):
     return out
 
 
+def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
+                        dtype=jnp.bfloat16):
+    """Page pool for one layer: ``[num_pages, page_size, Hkv, hd]``.
+
+    Physical pages are owned exclusively by one request slot (the pager's
+    invariant); logical order is reconstructed at read time by gathering
+    through the per-slot page table. Page 0 is the pager's scratch page —
+    inactive slots keep scattering into it so the jit'd decode step never
+    re-specializes on batch composition.
+    """
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant == "int8":
+        sshape = (num_pages, page_size, cfg.num_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(sshape, jnp.float32),
+                "vs": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
+    """Single-token decode against a paged KV pool.
+
+    pool leaves ``[num_pages, P, ...]``; page_table ``[B, pages_per_slot]``
+    int32 (physical page per logical block); x ``[B, D]``, pos ``[B]``.
+    Returns (y [B, D], new pool). The gathered logical view is laid out
+    exactly like the dense ``[B, S, Hkv, hd]`` cache, so paged and dense
+    decode produce bitwise-identical attention outputs.
+    """
+    b = x.shape[0]
+    q, k1, v1 = _project_qkv(p, x, cfg, pos, 0, name)       # [B, H(kv), hd]
+    page_size = pool["k"].shape[1]
+    phys = jnp.take_along_axis(page_table, (pos // page_size)[:, None],
+                               axis=1)[:, 0]                # [B]
+    offset = pos % page_size
+    quant = "ks" in pool
+    new_pool = {}
+    if quant:
+        k1, ks1 = _kv_quantize(k1)
+        v1, vs1 = _kv_quantize(v1)
+        new_pool["ks"] = pool["ks"].at[phys, offset].set(ks1)
+        new_pool["vs"] = pool["vs"].at[phys, offset].set(vs1)
+    new_pool["k"] = pool["k"].at[phys, offset].set(k1.astype(pool["k"].dtype))
+    new_pool["v"] = pool["v"].at[phys, offset].set(v1.astype(pool["v"].dtype))
+
+    # gather-based read: page table → logical [B, S_slot, Hkv, hd] view
+    s_slot = page_table.shape[1] * page_size
+    ck = new_pool["k"][page_table].reshape(b, s_slot, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    cv = new_pool["v"][page_table].reshape(b, s_slot, cfg.num_kv_heads,
+                                           cfg.head_dim)
+    adt = jnp.dtype(cfg.activation_dtype)
+    if quant:
+        ks = new_pool["ks"][page_table].reshape(b, s_slot, cfg.num_kv_heads)
+        vs = new_pool["vs"][page_table].reshape(b, s_slot, cfg.num_kv_heads)
+        ck = _kv_dequant(ck, ks, adt)
+        cv = _kv_dequant(cv, vs, adt)
+    k_pos = jnp.where(jnp.arange(s_slot)[None, :] <= pos[:, None],
+                      jnp.arange(s_slot)[None, :], -1)
+    g = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, 1, cfg.num_kv_heads, g, cfg.head_dim)
+    out = _sdpa(qg, ck, cv, pos[:, None], k_pos, causal=False, window=0,
+                scale=cfg.head_dim ** -0.5)
+    out = out.reshape(b, cfg.q_dim)
+    nm = (lambda s_: None) if name is None else name
+    y = linear(p["wo"], out, nm("wo"))
+    return y, new_pool
+
+
 def attention_decode(p, cache, x, cfg, *, pos, window: int = 0, name=None):
     """Single-token decode. x [B, D], pos [B] -> (y [B, D], new cache).
 

@@ -79,6 +79,32 @@ def init_block_cache(cfg, kind: LayerKind, batch: int, max_seq: int,
     return c
 
 
+def init_block_cache_paged(cfg, kind: LayerKind, num_slots: int,
+                           num_pages: int, page_size: int, slot_seq: int,
+                           dtype=jnp.bfloat16):
+    """Per-layer decode cache for the continuous-batching engine.
+
+    Unbounded full-attention KV goes into a shared **page pool** (key
+    ``kv_pool``; read/written through per-slot page tables). Bounded state —
+    sliding-window rings, SSM states, MLA latents — stays dense with the
+    slot index as the batch dim, since its footprint is fixed per slot.
+    ``slot_seq`` is the per-slot capacity (pages_per_slot × page_size).
+    """
+    c: dict = {}
+    if kind.mixer in ("attn", "hymba"):
+        if kind.window:
+            c["kv"] = attn_mod.init_kv_cache(cfg, num_slots, slot_seq,
+                                             kind.window, dtype)
+        else:
+            c["kv_pool"] = attn_mod.init_paged_kv_cache(cfg, num_pages,
+                                                        page_size, dtype)
+    if kind.mixer == "mla":
+        c["mla"] = mla_mod.init_mla_cache(cfg, num_slots, slot_seq, dtype)
+    if kind.mixer in ("mamba", "hymba"):
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, num_slots)
+    return c
+
+
 # --------------------------------------------------------------------- apply
 
 def _mixer_train(p, x, cfg, kind: LayerKind, positions, name):
@@ -108,11 +134,22 @@ def _mixer_train(p, x, cfg, kind: LayerKind, positions, name):
     raise ValueError(kind.mixer)
 
 
-def _mixer_decode(p, cache, x, cfg, kind: LayerKind, pos, name):
+def _attn_decode(p, cache, x, cfg, kind: LayerKind, pos, page_table):
+    """Dispatch dense/ring vs. paged full-attention decode by cache key."""
+    if "kv_pool" in cache:
+        y, pool = attn_mod.attention_decode_paged(p["attn"], cache["kv_pool"],
+                                                  page_table, x, cfg, pos=pos)
+        return y, ("kv_pool", pool)
+    y, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
+                                      pos=pos, window=kind.window)
+    return y, ("kv", kv)
+
+
+def _mixer_decode(p, cache, x, cfg, kind: LayerKind, pos, name,
+                  page_table=None):
     if kind.mixer == "attn":
-        y, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
-                                          pos=pos, window=kind.window)
-        return y, {"kv": kv}
+        y, (ck, kv) = _attn_decode(p, cache, x, cfg, kind, pos, page_table)
+        return y, {ck: kv}
     if kind.mixer == "mla":
         y, mc = mla_mod.mla_decode(p["attn"], cache["mla"], x, cfg, pos=pos)
         return y, {"mla": mc}
@@ -120,12 +157,11 @@ def _mixer_decode(p, cache, x, cfg, kind: LayerKind, pos, name):
         y, sc = ssm_mod.ssm_decode(p["ssm"], cache["ssm"], x, cfg)
         return y, {"ssm": sc}
     if kind.mixer == "hymba":
-        ya, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
-                                           pos=pos, window=kind.window)
+        ya, (ck, kv) = _attn_decode(p, cache, x, cfg, kind, pos, page_table)
         ys, sc = ssm_mod.ssm_decode(p["ssm"], cache["ssm"], x, cfg)
         ya = norm(p["attn_out_norm"], ya, cfg)
         ys = norm(p["ssm_out_norm"], ys, cfg)
-        return (ya + ys) * 0.5, {"kv": kv, "ssm": sc}
+        return (ya + ys) * 0.5, {ck: kv, "ssm": sc}
     raise ValueError(kind.mixer)
 
 
@@ -144,11 +180,12 @@ def _mlp_apply(p, x, cfg, kind: LayerKind, name):
 
 
 def block_apply(p, x, cfg, kind: LayerKind, *, mode: str, positions=None,
-                cache=None, name=None):
+                cache=None, name=None, page_table=None):
     """Returns (x_out, cache_out, aux_loss). name: callable local→str or None."""
     h = norm(p["pre_norm"], x, cfg)
     if mode == "decode":
-        y, cache = _mixer_decode(p, cache, h, cfg, kind, positions, name)
+        y, cache = _mixer_decode(p, cache, h, cfg, kind, positions, name,
+                                 page_table)
     else:
         y = _mixer_train(p, h, cfg, kind, positions, name)
         if mode == "prefill" and kind.mixer in ("attn", "mla", "hymba"):

@@ -142,6 +142,13 @@ class Model:
         return stack.stack_init_cache(cfg, batch,
                                       max_seq or cfg.max_seq_len, dtype)
 
+    def init_paged_cache(self, num_slots: int, num_pages: int,
+                         page_size: int, slot_seq: int,
+                         dtype=jnp.bfloat16) -> Any:
+        """Decode cache for the continuous-batching engine (serving/)."""
+        return stack.stack_init_paged_cache(self.cfg, num_slots, num_pages,
+                                            page_size, slot_seq, dtype)
+
     def prefill(self, params, batch: dict, cache: Any
                 ) -> tuple[Any, jax.Array, jax.Array]:
         """Full-sequence prefill → (cache, last-token logits, next pos [B])."""
@@ -158,15 +165,20 @@ class Model:
         return cache, logits, positions[:, -1] + 1
 
     def decode_step(self, params, cache: Any, token: jax.Array,
-                    pos: jax.Array) -> tuple[jax.Array, Any]:
-        """One token: token [B] int32, pos [B] → (logits [B, V], cache)."""
+                    pos: jax.Array, page_table: jax.Array | None = None
+                    ) -> tuple[jax.Array, Any]:
+        """One token: token [B] int32, pos [B] → (logits [B, V], cache).
+
+        ``page_table`` [B, pages_per_slot] routes paged-cache reads/writes
+        when ``cache`` came from `init_paged_cache`.
+        """
         cfg = self.cfg
         adt = jnp.dtype(cfg.activation_dtype)
         x = embed_lookup(params["embed"], token,
                          scale=cfg.scale_embed).astype(adt)   # [B, D]
         x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
                                         mode="decode", positions=pos,
-                                        cache=cache)
+                                        cache=cache, page_table=page_table)
         x = norm(params["final_norm"], x, cfg)
         logits = self._head_logits(params, x)
         logits = constrain(logits, ("batch", "vocab"))

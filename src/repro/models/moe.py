@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packing import PackedLinear, dequantize_packed
-from repro.distributed import constrain
+from repro.distributed import constrain, shard_map
 from repro.models import layers
 from repro.models.layers import activation, linear
 
@@ -250,7 +250,7 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
                 return y_l[None]
 
             wsp = P(None, None, "model")
-            y = jax.shard_map(
+            y = shard_map(
                 body_q, mesh=mesh,
                 in_specs=(P(dp), P(dp), P(dp),
                           wsp, wsp, wsp, P(),
@@ -278,7 +278,7 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
 
             wspec = P(None, None, "model") if has_model else P()
             wspec_d = P(None, "model", None) if has_model else P()
-            y = jax.shard_map(
+            y = shard_map(
                 body, mesh=mesh,
                 in_specs=(P(dp), P(dp), P(dp), wspec, wspec, wspec_d),
                 out_specs=P(dp),

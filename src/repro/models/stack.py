@@ -45,12 +45,31 @@ def stack_init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     return out
 
 
+def stack_init_paged_cache(cfg, num_slots: int, num_pages: int,
+                           page_size: int, slot_seq: int,
+                           dtype=jnp.bfloat16):
+    """Paged decode cache: page pools (full attention) + per-slot state."""
+    out = {}
+    for si, (kind, n) in enumerate(cfg.segments()):
+        one = blocks.init_block_cache_paged(cfg, kind, num_slots, num_pages,
+                                            page_size, slot_seq, dtype)
+        out[seg_name(si)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
+    return out
+
+
 def _take(tree, i):
     return jax.tree.map(lambda a: a[i], tree)
 
 
-def stack_apply(params, x, cfg, *, mode: str, positions, cache=None):
-    """Run all segments. Returns (x, cache_out, aux_loss_sum)."""
+def stack_apply(params, x, cfg, *, mode: str, positions, cache=None,
+                page_table=None):
+    """Run all segments. Returns (x, cache_out, aux_loss_sum).
+
+    ``page_table`` ([B, pages_per_slot] int32) is only consulted by paged
+    decode caches (``kv_pool`` entries); it is layer-invariant, so the scan
+    closes over it rather than scanning it.
+    """
     segs = cfg.segments()
     aux_total = jnp.zeros((), jnp.float32)
     cache_out = {} if cache is not None else None
@@ -67,7 +86,8 @@ def stack_apply(params, x, cfg, *, mode: str, positions, cache=None):
                 c_i = _take(c_seg, i) if c_seg is not None else None
                 x, c_new, aux = blocks.block_apply(
                     _take(p_seg, i), x, cfg, kind, mode=mode,
-                    positions=positions, cache=c_i, name=nm)
+                    positions=positions, cache=c_i, name=nm,
+                    page_table=page_table)
                 aux_total += aux
                 new_layers.append(c_new)
             if cache_out is not None:
@@ -84,7 +104,7 @@ def stack_apply(params, x, cfg, *, mode: str, positions, cache=None):
             p_i, c_i = xs
             xc, c_new, aux = blocks.block_apply(
                 p_i, xc, cfg, _kind, mode=mode, positions=positions,
-                cache=c_i)
+                cache=c_i, page_table=page_table)
             return (xc, aux_c + aux), c_new
 
         if cfg.remat and mode == "train":

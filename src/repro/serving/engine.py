@@ -1,17 +1,21 @@
-"""Batched generation engine: prefill → decode loop, sampling, quantized path.
+"""Serving facade: static-batch generation + continuous-batching streaming.
 
 This is the paper's end-to-end inference flow (§III: model packed offline,
-streamed to the accelerator, decoded token-by-token) as a framework feature:
+streamed to the accelerator, decoded token-by-token) grown into a serving
+subsystem:
 
   * `GenerationEngine(model, params)` — params may be float or AWQ-packed
     (`core.pipeline.quantize_params` output); every linear dispatches
     through `qlinear_apply`, so switching to the quantized model is a
     params swap, no engine change.
-  * continuous-batching-lite: per-request positions and EOS tracking; a
-    finished row keeps decoding into a scratch slot (masked out) so the
-    jit'd step never re-specializes on batch composition.
-  * `generate_scan` — the fixed-length `lax.scan` variant used by the
-    throughput benchmarks (no per-token host round-trip).
+  * static batch — `generate` (host loop, EOS early-exit) and
+    `generate_scan` (fixed-length `lax.scan`, the throughput-benchmark
+    path). These are the baselines the serving benchmarks compare against.
+  * streaming — `submit()` / `step()` / `collect()` on top of
+    `serving.scheduler` (continuous batching) and `serving.kv_pager`
+    (paged KV cache): per-request sampling params, EOS eviction with
+    immediate slot backfill, one fixed-shape jit'd decode dispatch per
+    step regardless of batch composition.
 """
 from __future__ import annotations
 
@@ -22,6 +26,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serving.kv_pager import (KVPager, PagerConfig, commit_prefill)
+from repro.serving.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,10 +48,32 @@ def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
     return jax.random.categorical(key, logits).astype(jnp.int32)
 
 
+def sample_batched(logits: jax.Array, temps: jax.Array, topks: jax.Array,
+                   key) -> jax.Array:
+    """Per-row sampling params: logits [B, V], temps [B], topks [B] → [B].
+
+    Rows with ``temps == 0`` are greedy (bitwise-identical to `sample` with
+    temperature 0, which the continuous-vs-static identity tests rely on);
+    ``topks == 0`` disables the top-k filter for that row.
+    """
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
+    desc = -jnp.sort(-scaled, axis=-1)
+    kth = jnp.take_along_axis(desc, jnp.clip(topks - 1, 0, v - 1)[:, None],
+                              axis=1)
+    filtered = jnp.where(scaled < kth, -1e30, scaled)
+    scaled = jnp.where((topks > 0)[:, None], filtered, scaled)
+    sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temps == 0.0, greedy, sampled)
+
+
 class GenerationEngine:
     def __init__(self, model, params, *, max_seq: int | None = None,
                  sampler: SamplerConfig = SamplerConfig(),
-                 eos_id: int = -1, donate_cache: bool = True):
+                 eos_id: int = -1, donate_cache: bool = True,
+                 num_slots: int = 4, page_size: int = 16,
+                 num_pages: int | None = None, seed: int = 0):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -54,6 +83,14 @@ class GenerationEngine:
         self._prefill = jax.jit(model.prefill)
         donate = (1,) if donate_cache else ()
         self._step = jax.jit(self._decode_one, donate_argnums=donate)
+        # streaming/continuous-batching state (built lazily on first submit)
+        self.num_slots = num_slots
+        self.page_size = page_size
+        self._num_pages = num_pages
+        self._seed = seed
+        self._next_rid = 0
+        self._scheduler: Scheduler | None = None
+        self._paged_cache = None
 
     def _decode_one(self, params, cache, token, pos, key):
         logits, cache = self.model.decode_step(params, cache, token, pos)
@@ -82,6 +119,140 @@ class GenerationEngine:
             if self.eos_id >= 0 and finished.all():
                 break
         return np.stack(out, axis=1)
+
+    # ------------------------------------------------------------ streaming
+    # submit()/step()/collect() — continuous batching over the paged cache.
+
+    def _serving_init(self) -> Scheduler:
+        if self.max_seq % self.page_size:
+            raise ValueError("max_seq must be a multiple of page_size")
+        pages_per_slot = self.max_seq // self.page_size
+        num_pages = self._num_pages
+        if num_pages is None:   # full capacity: every slot can hit max_seq
+            num_pages = self.num_slots * pages_per_slot + 1
+        pager = KVPager(PagerConfig(num_pages=num_pages,
+                                    page_size=self.page_size,
+                                    num_slots=self.num_slots,
+                                    pages_per_slot=pages_per_slot))
+        self._paged_cache = self.model.init_paged_cache(
+            self.num_slots, num_pages, self.page_size, self.max_seq)
+        # one dispatch per admission: prefill + page commit + first sample
+        self._prefill_fused = jax.jit(self._prefill_commit_fn,
+                                      donate_argnums=(1,))
+        self._decode_paged = jax.jit(self._decode_paged_fn,
+                                     donate_argnums=(1,))
+        self._decode_greedy = jax.jit(self._decode_greedy_fn,
+                                      donate_argnums=(1,))
+        self._key = jax.random.PRNGKey(self._seed)
+        self._tables_version = -1
+        self._tables_dev = None
+        return Scheduler(pager, prefill_commit=self._exec_prefill_commit,
+                         decode=self._exec_decode)
+
+    def _prefill_commit_fn(self, params, cache, tokens, slot, pages,
+                           temp, topk, key):
+        """tokens [1, S] → (first sampled token, updated paged cache)."""
+        pre = self.model.init_cache(1, tokens.shape[1])
+        pre, logits, _ = self.model.prefill(params, {"tokens": tokens}, pre)
+        cache = commit_prefill(cache, pre, slot, pages,
+                               page_size=self.page_size)
+        tok = sample_batched(logits, temp[None], topk[None], key)
+        return tok[0], cache
+
+    def _decode_paged_fn(self, params, cache, page_tables, token, pos,
+                         temps, topks, key):
+        logits, cache = self.model.decode_step(params, cache, token, pos,
+                                               page_table=page_tables)
+        return sample_batched(logits, temps, topks, key), cache
+
+    def _decode_greedy_fn(self, params, cache, page_tables, token, pos):
+        """Greedy fast path: no PRNG, no sort/top-k machinery."""
+        logits, cache = self.model.decode_step(params, cache, token, pos,
+                                               page_table=page_tables)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    # --- executor callables handed to the Scheduler (host-side glue) ------
+    def _exec_prefill_commit(self, req: Request, slot: int,
+                             pages: list[int]) -> int:
+        self._key, sub = jax.random.split(self._key)
+        toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+        tok, self._paged_cache = self._prefill_fused(
+            self.params, self._paged_cache, toks, jnp.int32(slot),
+            jnp.asarray(pages, jnp.int32),
+            jnp.asarray(req.temperature, jnp.float32),
+            jnp.asarray(req.top_k, jnp.int32), sub)
+        return int(tok)
+
+    def _exec_decode(self, page_tables, token, pos, temps, topks
+                     ) -> np.ndarray:
+        pager = self._scheduler.pager
+        if self._tables_version != pager.version:   # upload only on mutation
+            self._tables_dev = jnp.asarray(page_tables)
+            self._tables_version = pager.version
+        tables = self._tables_dev
+        if not temps.any() and not topks.any():
+            next_tok, self._paged_cache = self._decode_greedy(
+                self.params, self._paged_cache, tables,
+                jnp.asarray(token), jnp.asarray(pos))
+        else:
+            self._key, sub = jax.random.split(self._key)
+            next_tok, self._paged_cache = self._decode_paged(
+                self.params, self._paged_cache, tables,
+                jnp.asarray(token), jnp.asarray(pos), jnp.asarray(temps),
+                jnp.asarray(topks), sub)
+        return np.asarray(next_tok)
+
+    def submit(self, tokens, max_new_tokens: int,
+               sampler: SamplerConfig | None = None,
+               eos_id: int | None = None) -> int:
+        """Queue one request; returns its request id."""
+        if self._scheduler is None:
+            self._scheduler = self._serving_init()
+        s = sampler or self.sampler
+        rid = self._next_rid
+        self._next_rid += 1
+        self._scheduler.submit(Request(
+            rid=rid, tokens=np.asarray(tokens, np.int32).reshape(-1),
+            max_new_tokens=max_new_tokens, temperature=s.temperature,
+            top_k=s.top_k,
+            eos_id=self.eos_id if eos_id is None else eos_id))
+        return rid
+
+    def step(self) -> list[tuple[int, int]]:
+        """One scheduler step → list of (rid, token) stream events."""
+        if self._scheduler is None:
+            return []
+        return self._scheduler.step()
+
+    def collect(self) -> dict[int, np.ndarray]:
+        """Drain finished requests accumulated so far: {rid: tokens}."""
+        if self._scheduler is None:
+            return {}
+        out = dict(self._scheduler.finished)
+        self._scheduler.finished.clear()
+        return out
+
+    def drain(self) -> dict[int, np.ndarray]:
+        """Step until queue + slots are empty; returns all finished."""
+        if self._scheduler is None:
+            return {}
+        out = self.collect()
+        out.update(self._scheduler.run())
+        return out
+
+    @property
+    def idle(self) -> bool:
+        """True when no requests are queued or in flight."""
+        return self._scheduler is None or self._scheduler.idle
+
+    @property
+    def num_active(self) -> int:
+        """Requests currently holding a decode slot."""
+        return 0 if self._scheduler is None else self._scheduler.num_active
+
+    @property
+    def scheduler_stats(self):
+        return self._scheduler.stats if self._scheduler else None
 
     def generate_scan(self, batch: dict, max_new_tokens: int, key=None):
         """Fixed-length scan generation (benchmark path, single dispatch)."""

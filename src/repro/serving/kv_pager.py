@@ -1,0 +1,233 @@
+"""Paged KV cache: fixed-size pages, per-request page tables, alloc/free.
+
+The dense decode cache sizes every request at ``max_seq`` — a 16-slot
+engine at 32k context holds 512k tokens of KV even when serving 16
+eight-token chats. Paging (vLLM-style, adapted to jit-stable JAX shapes)
+splits KV into fixed ``page_size``-token pages drawn from a shared pool:
+
+  * device side — per-layer pools ``[num_pages, P, Hkv, hd]`` (see
+    `models.attention.init_paged_kv_cache`); decode scatters the new
+    token's K/V into ``pool[table[slot, pos // P], pos % P]`` and reads by
+    gathering ``pool[table[slot]]`` back into logical order. All shapes are
+    fixed, so the jit'd decode step never re-specializes as requests come
+    and go.
+  * host side — `KVPager` owns the free list and the ``[num_slots,
+    pages_per_slot]`` page tables. Pages are exclusively owned by one slot;
+    **page 0 is a reserved scratch page** that inactive slots keep writing
+    into, which is what lets finished rows ride along in the fixed batch.
+
+Admission control is conservative: a request is admitted only if its
+worst-case footprint (prompt + max_new − 1 tokens) can be covered by free
+plus already-reserved pages, so `extend` during decode can never fail.
+
+`commit_prefill` is the device-side bridge from a per-request dense
+prefill cache (``model.prefill`` output, batch 1, seq = prompt length) into
+the paged/slot caches; it is shape-polymorphic and meant to be jit'd per
+prompt length by the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageAllocationError(RuntimeError):
+    """Request cannot be placed: not enough free pages or slot capacity."""
+
+
+@dataclasses.dataclass
+class PagerConfig:
+    num_pages: int        # total physical pages incl. the scratch page 0
+    page_size: int        # tokens per page
+    num_slots: int        # concurrent requests (decode batch size)
+    pages_per_slot: int   # logical blocks per slot (slot capacity / P)
+
+
+class KVPager:
+    """Host-side page-table + free-list accounting (no device arrays)."""
+
+    def __init__(self, cfg: PagerConfig):
+        if cfg.num_pages < 2:
+            raise ValueError("need ≥2 pages (page 0 is scratch)")
+        self.cfg = cfg
+        # LIFO free list: newly freed pages are reused first (cache-warm).
+        self.free_pages: list[int] = list(range(cfg.num_pages - 1, 0, -1))
+        self.free_slots: list[int] = list(range(cfg.num_slots - 1, -1, -1))
+        self.page_tables = np.zeros((cfg.num_slots, cfg.pages_per_slot),
+                                    np.int32)
+        self.slot_pages: dict[int, list[int]] = {}
+        self.slot_reserved: dict[int, int] = {}
+        self.slot_len = np.zeros(cfg.num_slots, np.int64)
+        self._reserved = 0   # pages promised to active slots, not yet drawn
+        # bumped on every page-table mutation; lets the engine cache the
+        # device copy of the tables instead of re-uploading each step
+        self.version = 0
+
+    # ------------------------------------------------------------- metrics
+    @property
+    def num_free_pages(self) -> int:
+        return len(self.free_pages)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.cfg.num_pages - 1 - len(self.free_pages)
+
+    @property
+    def num_free_slots(self) -> int:
+        return len(self.free_slots)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.page_size)
+
+    # ----------------------------------------------------------- lifecycle
+    def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
+        """Static check: could this request EVER be placed on an idle engine?
+
+        Shared by `can_admit` and the scheduler's submit-time rejection so
+        the two capacity rules cannot drift apart.
+        """
+        total = prompt_len + max_new_tokens - 1   # last token is never cached
+        need = self.pages_for(total)
+        return (need <= self.cfg.pages_per_slot
+                and need <= self.cfg.num_pages - 1)
+
+    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
+        total = prompt_len + max_new_tokens - 1
+        return (bool(self.free_slots)
+                and self.fits(prompt_len, max_new_tokens)
+                and (len(self.free_pages) - self._reserved
+                     >= self.pages_for(total)))
+
+    def alloc_slot(self, prompt_len: int, max_new_tokens: int
+                   ) -> tuple[int, list[int]]:
+        """Place a request: returns (slot, physical pages for the prompt).
+
+        Reserves (but does not draw) the pages decode will need, so later
+        `extend` calls cannot fail.
+        """
+        if not self.can_admit(prompt_len, max_new_tokens):
+            raise PageAllocationError(
+                f"cannot admit prompt_len={prompt_len} "
+                f"max_new={max_new_tokens}: free_slots={len(self.free_slots)}"
+                f" free_pages={len(self.free_pages)} reserved={self._reserved}")
+        slot = self.free_slots.pop()
+        total = self.pages_for(prompt_len + max_new_tokens - 1)
+        now = self.pages_for(prompt_len)
+        pages = [self.free_pages.pop() for _ in range(now)]
+        self.slot_pages[slot] = pages
+        self.page_tables[slot, :now] = pages
+        self.version += 1
+        self.slot_reserved[slot] = total - now
+        self._reserved += total - now
+        self.slot_len[slot] = prompt_len
+        return slot, pages
+
+    def extend(self, slot: int, new_len: int) -> None:
+        """Grow a slot's mapping to cover ``new_len`` tokens (from reserve)."""
+        pages = self.slot_pages[slot]
+        need = self.pages_for(new_len)
+        if need > self.cfg.pages_per_slot:
+            raise PageAllocationError(f"slot {slot} over capacity: {new_len}")
+        while len(pages) < need:
+            if self.slot_reserved[slot] <= 0:
+                raise PageAllocationError(
+                    f"slot {slot} grew past its reservation ({new_len})")
+            page = self.free_pages.pop()
+            self.page_tables[slot, len(pages)] = page
+            pages.append(page)
+            self.version += 1
+            self.slot_reserved[slot] -= 1
+            self._reserved -= 1
+        self.slot_len[slot] = max(int(self.slot_len[slot]), new_len)
+
+    def free_slot(self, slot: int) -> None:
+        """Return a finished request's pages + slot; resets table to scratch."""
+        self.free_pages.extend(self.slot_pages.pop(slot))
+        self._reserved -= self.slot_reserved.pop(slot, 0)
+        self.page_tables[slot, :] = 0
+        self.slot_len[slot] = 0
+        self.free_slots.append(slot)
+        self.version += 1
+
+
+# ---------------------------------------------------------------------------
+# Device-side commit: dense per-request prefill cache → paged / slot caches
+# ---------------------------------------------------------------------------
+
+def _commit_paged_leaf(pool, pre, phys_pages, page_size: int):
+    """pre [L, 1, S, ...] → scatter into pool [L, num_pages, P, ...]."""
+    lead = pre.shape[0]
+    s = pre.shape[2]
+    rest = pre.shape[3:]
+    pre = pre[:, 0].astype(pool.dtype)                    # [L, S, ...]
+    full = s // page_size
+    rem = s % page_size
+    if full:
+        body = pre[:, :full * page_size].reshape(
+            (lead, full, page_size) + rest)
+        pool = pool.at[:, phys_pages[:full]].set(body)
+    if rem:
+        pool = pool.at[:, phys_pages[full], :rem].set(pre[:, full * page_size:])
+    return pool
+
+
+def _commit_ring_leaf(slot_cache, pre, slot):
+    """pre [L, 1, S≤W, ...] → write into ring slot row [L, num_slots, W, ...].
+
+    For S < W the prefill ring is dense (position p at ring slot p); pad
+    with zeros so the whole row is overwritten — stale state from the
+    slot's previous occupant must never survive reuse.
+    """
+    lead, _, s = pre.shape[:3]
+    w = slot_cache.shape[2]
+    row = pre[:, 0].astype(slot_cache.dtype)
+    if s < w:
+        pad = jnp.zeros((lead, w - s) + row.shape[2:], slot_cache.dtype)
+        row = jnp.concatenate([row, pad], axis=1)
+    return slot_cache.at[:, slot].set(row)
+
+
+def commit_prefill(cache, prefill_cache, slot, phys_pages, *,
+                   page_size: int):
+    """Merge one request's prefill cache into the shared paged cache.
+
+    ``cache``: `Model.init_paged_cache` pytree; ``prefill_cache``: the
+    populated `Model.init_cache(1, prompt_len)` pytree; ``slot`` int32
+    scalar; ``phys_pages`` [pages_for(prompt_len)] int32. Pure function —
+    jit per prompt length with cache donated.
+    """
+    out = {}
+    for seg, entry in cache.items():
+        pre_entry = prefill_cache[seg]
+        new_entry = {}
+        for kind_key, leaves in entry.items():
+            if kind_key == "kv_pool":
+                new_entry[kind_key] = {
+                    k: _commit_paged_leaf(leaves[k], pre_entry["kv"][k],
+                                          phys_pages, page_size)
+                    for k in leaves}
+            elif kind_key == "kv":         # sliding-window ring, per slot
+                new_entry[kind_key] = {
+                    k: _commit_ring_leaf(leaves[k], pre_entry["kv"][k], slot)
+                    for k in leaves}
+            elif kind_key == "mla":        # dense per-slot latent cache
+                new_entry[kind_key] = {
+                    k: _commit_dense_leaf(leaves[k], pre_entry["mla"][k], slot)
+                    for k in leaves}
+            elif kind_key == "ssm":        # per-slot recurrent state
+                new_entry[kind_key] = {
+                    k: leaves[k].at[:, slot].set(
+                        pre_entry["ssm"][k][:, 0].astype(leaves[k].dtype))
+                    for k in leaves}
+            else:
+                raise ValueError(f"unknown cache entry {kind_key!r}")
+        out[seg] = new_entry
+    return out
+
+
+def _commit_dense_leaf(slot_cache, pre, slot):
+    """pre [L, 1, S, ...] → slot row prefix [L, num_slots, S_max, ...]."""
+    s = pre.shape[2]
+    return slot_cache.at[:, slot, :s].set(pre[:, 0].astype(slot_cache.dtype))

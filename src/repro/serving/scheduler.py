@@ -1,0 +1,179 @@
+"""Continuous-batching request scheduler (AccLLM/EdgeLLM-style runtime).
+
+The decode step is a fixed-shape jit'd function over ``num_slots`` rows;
+the scheduler's job is to keep those rows saturated:
+
+  * **admission** — FIFO queue; a request is admitted when a slot is free
+    and the pager can cover its worst-case KV footprint. Admission runs a
+    per-request prefill (jit per prompt length), samples the first token
+    with the request's own sampling params, and commits the prefill KV
+    into the paged cache.
+  * **decode interleaving** — one `step()` decodes every active slot in a
+    single fixed-shape dispatch; per-request positions, temperatures and
+    top-k ride along as arrays, inactive rows decode into the pager's
+    scratch page (masked out host-side).
+  * **EOS eviction + backfill** — a row finishing (EOS or token budget)
+    frees its pages and slot, and the queue is drained into freed slots
+    in the same `step()` call, so the batch never idles a slot while work
+    is queued.
+
+The scheduler is deliberately device-agnostic: it talks to the engine
+through two callables (`prefill_commit`, `decode`) and keeps only
+host-side state, so it can be unit-tested with a fake executor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import numpy as np
+
+from repro.serving.kv_pager import KVPager
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    tokens: np.ndarray            # [S] int32 prompt
+    max_new_tokens: int
+    temperature: float = 0.0      # 0 ⇒ greedy
+    top_k: int = 0                # 0 ⇒ full softmax
+    eos_id: int = -1              # -1 ⇒ never stops early
+
+
+@dataclasses.dataclass
+class _SlotState:
+    request: Request
+    generated: list[int]          # sampled tokens, first comes from prefill
+
+    @property
+    def next_pos(self) -> int:
+        """Cache position where the next decode input token is written."""
+        return len(self.request.tokens) + len(self.generated) - 1
+
+    @property
+    def done(self) -> bool:
+        r = self.request
+        return (len(self.generated) >= r.max_new_tokens
+                or (r.eos_id >= 0 and self.generated
+                    and self.generated[-1] == r.eos_id))
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    admitted: int = 0
+    finished: int = 0
+    decode_steps: int = 0
+    slot_tokens: int = 0          # useful tokens produced by decode rows
+    slot_steps: int = 0           # total rows dispatched (incl. idle)
+
+
+class Scheduler:
+    """Queue + slot bookkeeping over an executor's jit'd prefill/decode."""
+
+    def __init__(self, pager: KVPager, *,
+                 prefill_commit: Callable[[Request, int, list[int]], int],
+                 decode: Callable[[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray, np.ndarray], np.ndarray]):
+        self.pager = pager
+        self.num_slots = pager.cfg.num_slots
+        # prefill_commit(request, slot, pages) → first sampled token; the
+        # engine fuses prefill + page commit + sampling into one dispatch
+        self._prefill_commit = prefill_commit
+        self._decode = decode
+        self.queue: deque[Request] = deque()
+        self.slots: dict[int, _SlotState] = {}
+        self.finished: dict[int, np.ndarray] = {}
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------------ api
+    def submit(self, request: Request) -> None:
+        if len(request.tokens) < 1:
+            raise ValueError("empty prompt")
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be ≥ 1")
+        # reject requests that could never be placed even on an idle engine —
+        # otherwise they sit at the queue head forever and stall everything
+        if not self.pager.fits(len(request.tokens), request.max_new_tokens):
+            pc = self.pager.cfg
+            raise ValueError(
+                f"request rid={request.rid} exceeds engine capacity: "
+                f"{len(request.tokens) + request.max_new_tokens - 1} KV "
+                f"tokens vs slot capacity "
+                f"{pc.pages_per_slot * pc.page_size} "
+                f"({pc.num_pages - 1} usable pages)")
+        self.queue.append(request)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.slots)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.slots
+
+    def step(self) -> list[tuple[int, int]]:
+        """Admit → decode all slots once → evict + backfill.
+
+        Returns ``(rid, token)`` stream events in emission order.
+        """
+        events: list[tuple[int, int]] = []
+        self._admit(events)
+        if self.slots:
+            self._decode_once(events)
+            self._admit(events)          # backfill slots freed by EOS now
+        return events
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain queue + slots to completion; returns {rid: tokens}."""
+        while not self.idle:
+            self.step()
+        out, self.finished = self.finished, {}
+        return out
+
+    # ------------------------------------------------------------ internals
+    def _admit(self, events: list[tuple[int, int]]) -> None:
+        while self.queue and self.pager.can_admit(
+                len(self.queue[0].tokens), self.queue[0].max_new_tokens):
+            req = self.queue.popleft()
+            slot, pages = self.pager.alloc_slot(len(req.tokens),
+                                                req.max_new_tokens)
+            tok = int(self._prefill_commit(req, slot, pages))
+            st = _SlotState(request=req, generated=[tok])
+            self.slots[slot] = st
+            self.stats.admitted += 1
+            events.append((req.rid, tok))
+            if st.done:
+                self._finish(slot)
+
+    def _decode_once(self, events: list[tuple[int, int]]) -> None:
+        b = self.num_slots
+        token = np.zeros(b, np.int32)
+        pos = np.zeros(b, np.int32)
+        temps = np.zeros(b, np.float32)
+        topks = np.zeros(b, np.int32)
+        for slot, st in self.slots.items():
+            token[slot] = st.generated[-1]
+            pos[slot] = st.next_pos
+            temps[slot] = st.request.temperature
+            topks[slot] = st.request.top_k
+            self.pager.extend(slot, st.next_pos + 1)
+        next_tokens = self._decode(self.pager.page_tables, token, pos,
+                                   temps, topks)
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += b
+        for slot in list(self.slots):
+            st = self.slots[slot]
+            tok = int(next_tokens[slot])
+            st.generated.append(tok)
+            self.stats.slot_tokens += 1
+            events.append((st.request.rid, tok))
+            if st.done:
+                self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        st = self.slots.pop(slot)
+        self.pager.free_slot(slot)
+        self.finished[st.request.rid] = np.asarray(st.generated, np.int32)
+        self.stats.finished += 1

@@ -1,0 +1,18 @@
+"""Version-tolerant lookups for jax APIs that moved between releases.
+
+The container pins one jax, but the repo is exercised against several
+(CI, TPU pods, dev laptops); every rename we depend on gets resolved here
+once instead of per call site:
+
+  * Pallas-TPU compiler params: ``TPUCompilerParams`` → ``CompilerParams``
+  * ``shard_map``: ``jax.experimental.shard_map`` → ``jax.shard_map``
+    (handled in `repro.distributed.sharding.shard_map`, which also
+    translates the ``check_rep`` → ``check_vma`` kwarg rename)
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# post-rename name first so new jax doesn't emit deprecation warnings
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

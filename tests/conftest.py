@@ -6,6 +6,18 @@ import pytest
 # NOTE: no XLA_FLAGS here on purpose — tests run on the single real device;
 # only launch/dryrun.py (and the dedicated subprocess in test_distributed)
 # request placeholder devices.
+#
+# Determinism audit (PR 1): every random draw in the suite goes through an
+# explicitly seeded generator — `np.random.default_rng(<literal>)` or
+# `jax.random.PRNGKey(<literal or parametrize value>)`. The fixture below
+# additionally pins numpy's legacy global state so any future accidental
+# `np.random.*` call is at least reproducible rather than flaky.
+
+
+@pytest.fixture(autouse=True)
+def _pin_global_numpy_seed():
+    np.random.seed(0)
+    yield
 
 
 def make_batch(cfg, b=2, s=64, seed=0, labels=True):

@@ -1,0 +1,99 @@
+"""KVPager: page alloc/free/reuse accounting + commit scatter layout."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kv_pager import (KVPager, PageAllocationError, PagerConfig,
+                                    commit_prefill)
+
+
+def _pager(num_pages=17, page_size=4, num_slots=4, pages_per_slot=4):
+    return KVPager(PagerConfig(num_pages=num_pages, page_size=page_size,
+                               num_slots=num_slots,
+                               pages_per_slot=pages_per_slot))
+
+
+def test_alloc_free_roundtrip_accounting():
+    p = _pager()
+    assert p.num_free_pages == 16 and p.pages_in_use == 0
+    slot, pages = p.alloc_slot(prompt_len=6, max_new_tokens=5)
+    # 6-token prompt at P=4 → 2 pages now; 6+5-1=10 tokens → 3 total, 1 held
+    assert len(pages) == 2
+    assert p.pages_in_use == 2
+    assert p.num_free_pages == 14
+    assert p.slot_reserved[slot] == 1
+    p.extend(slot, 9)                      # 9 tokens → 3rd page drawn
+    assert p.pages_in_use == 3 and p.slot_reserved[slot] == 0
+    p.free_slot(slot)
+    assert p.pages_in_use == 0 and p.num_free_pages == 16
+    assert p.num_free_slots == 4
+    assert (p.page_tables[slot] == 0).all()   # back to scratch mapping
+
+
+def test_page_exclusivity_and_reuse():
+    p = _pager()
+    s1, pg1 = p.alloc_slot(4, 1)
+    s2, pg2 = p.alloc_slot(4, 1)
+    assert not set(pg1) & set(pg2)
+    assert 0 not in pg1 + pg2              # scratch page never handed out
+    p.free_slot(s1)
+    s3, pg3 = p.alloc_slot(8, 1)
+    # LIFO free list: the freed page is reused first
+    assert pg1[0] in pg3
+    assert not set(pg3) & set(pg2)
+
+
+def test_admission_respects_reservations():
+    # 5 usable pages; first request reserves 4 (16 tokens worst case)
+    p = _pager(num_pages=6, page_size=4, num_slots=2, pages_per_slot=4)
+    s1, _ = p.alloc_slot(prompt_len=4, max_new_tokens=13)   # 16 tok → 4 pages
+    assert p.slot_reserved[s1] == 3
+    # one unreserved page left → an 8-token request must be refused
+    assert not p.can_admit(prompt_len=5, max_new_tokens=4)
+    assert p.can_admit(prompt_len=4, max_new_tokens=1)
+    with pytest.raises(PageAllocationError):
+        p.alloc_slot(prompt_len=5, max_new_tokens=4)
+    # after the big request frees, admission succeeds again
+    p.free_slot(s1)
+    assert p.can_admit(prompt_len=5, max_new_tokens=4)
+
+
+def test_over_capacity_request_rejected():
+    p = _pager(pages_per_slot=2, page_size=4)   # 8-token slot capacity
+    assert not p.can_admit(prompt_len=6, max_new_tokens=4)
+    with pytest.raises(PageAllocationError):
+        p.alloc_slot(6, 4)
+
+
+def test_extend_cannot_outgrow_reservation():
+    p = _pager()
+    slot, _ = p.alloc_slot(prompt_len=4, max_new_tokens=1)  # exactly 1 page
+    with pytest.raises(PageAllocationError):
+        p.extend(slot, 5)
+
+
+def test_commit_scatter_matches_logical_order():
+    """Gather(commit(dense)) reproduces the dense sequence, incl. partial
+    last page."""
+    page_size, n_pages, pages_per_slot = 4, 9, 2
+    heads, hd, layers = 2, 3, 2
+    s = 6                                      # 1 full page + 2-token partial
+    rng = np.random.default_rng(0)
+    k = rng.normal(size=(layers, 1, s, heads, hd)).astype(np.float32)
+    v = rng.normal(size=(layers, 1, s, heads, hd)).astype(np.float32)
+    cache = {"seg_0": {"kv_pool": {
+        "k": jnp.zeros((layers, n_pages, page_size, heads, hd)),
+        "v": jnp.zeros((layers, n_pages, page_size, heads, hd))}}}
+    prefill = {"seg_0": {"kv": {"k": jnp.asarray(k), "v": jnp.asarray(v)}}}
+    phys = jnp.asarray([5, 2], jnp.int32)
+    out = commit_prefill(cache, prefill, jnp.int32(0), phys,
+                         page_size=page_size)
+    pool = out["seg_0"]["kv_pool"]["k"]
+    table = np.zeros((1, pages_per_slot), np.int32)
+    table[0, :2] = [5, 2]
+    gathered = np.asarray(pool)[:, table[0]].reshape(layers, -1, heads, hd)
+    np.testing.assert_array_equal(gathered[:, :s], k[:, 0])
+    # pages not owned by the slot stay zero
+    untouched = [i for i in range(n_pages) if i not in (5, 2)]
+    assert not np.asarray(pool)[:, untouched].any()

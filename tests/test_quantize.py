@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # property tests fall back to parametrized samples
+    HAVE_HYPOTHESIS = False
 
 from repro.core.quantize import (QuantConfig, dequantize_groupwise,
                                  fake_quantize, quantize_groupwise)
@@ -49,11 +54,8 @@ def test_constant_rows_stable():
     assert float(jnp.abs(wz).max()) == 0.0
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 4), st.integers(1, 3), st.floats(0.01, 10.0),
-       st.integers(0, 2 ** 31 - 1))
-def test_property_quant_error_bound(groups, n_over_8, scale, seed):
-    """∀ w: |dequant(quant(w)) − w| ≤ scale/2 per group (hypothesis)."""
+def _check_quant_error_bound(groups, n_over_8, scale, seed):
+    """∀ w: |dequant(quant(w)) − w| ≤ scale/2 per group."""
     gs = 64
     k, n = groups * gs, n_over_8 * 8
     w = jax.random.normal(jax.random.PRNGKey(seed), (k, n)) * scale
@@ -65,9 +67,7 @@ def test_property_quant_error_bound(groups, n_over_8, scale, seed):
     assert (err <= bound).all()
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 2 ** 31 - 1))
-def test_property_fake_quant_idempotent(seed):
+def _check_fake_quant_idempotent(seed):
     """Quantizing an already-quantized weight is exact (fixed point)."""
     w = jax.random.normal(jax.random.PRNGKey(seed), (64, 8))
     cfg = QuantConfig(group_size=64)
@@ -75,3 +75,27 @@ def test_property_fake_quant_idempotent(seed):
     w2 = fake_quantize(w1, cfg)
     np.testing.assert_allclose(np.asarray(w1), np.asarray(w2),
                                rtol=1e-5, atol=1e-6)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 4), st.integers(1, 3), st.floats(0.01, 10.0),
+           st.integers(0, 2 ** 31 - 1))
+    def test_property_quant_error_bound(groups, n_over_8, scale, seed):
+        _check_quant_error_bound(groups, n_over_8, scale, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_property_fake_quant_idempotent(seed):
+        _check_fake_quant_idempotent(seed)
+else:
+    @pytest.mark.parametrize("groups,n_over_8,scale,seed", [
+        (1, 1, 0.01, 0), (2, 2, 1.0, 7), (4, 3, 10.0, 1234),
+        (3, 1, 0.5, 2 ** 31 - 1), (1, 3, 3.3, 99),
+    ])
+    def test_property_quant_error_bound(groups, n_over_8, scale, seed):
+        _check_quant_error_bound(groups, n_over_8, scale, seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 17, 4096, 2 ** 31 - 1])
+    def test_property_fake_quant_idempotent(seed):
+        _check_fake_quant_idempotent(seed)

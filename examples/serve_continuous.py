@@ -8,7 +8,11 @@ the paged-KV continuous-batching engine:
   * `step()` returns `(request_id, token)` stream events as they are
     produced — this is the hook a real frontend would forward to clients,
   * finished requests are evicted mid-flight and their KV pages + batch
-    slot immediately reused by queued work.
+    slot immediately reused by queued work,
+  * the engine holds KV in **int8 pages** (``kv_quant="int8"``: quantized
+    on commit, dequantized inside the paged attention read), and requests
+    sharing a system prompt pass ``prefix_id`` so their common full pages
+    are aliased instead of recomputed — see docs/SERVING.md.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -26,21 +30,29 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     eng = GenerationEngine(model, params, max_seq=64,
-                           num_slots=4, page_size=8)
+                           num_slots=4, page_size=8,
+                           kv_quant="int8")      # int8 KV pages + scale strips
 
     rng = np.random.default_rng(0)
-    specs = [  # (prompt_len, max_new_tokens, temperature)
-        (5, 12, 0.0), (11, 4, 0.0), (8, 20, 0.8), (16, 6, 0.0),
-        (7, 9, 0.0), (13, 16, 1.2), (4, 5, 0.0), (9, 8, 0.0),
+    # a shared 16-token "system prompt": requests passing the same
+    # prefix_id alias its full KV pages instead of re-committing them
+    system = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    specs = [  # (tail_len, max_new_tokens, temperature, share_prefix)
+        (5, 12, 0.0, True), (11, 4, 0.0, False), (8, 20, 0.8, True),
+        (16, 6, 0.0, False), (7, 9, 0.0, True), (13, 16, 1.2, False),
+        (4, 5, 0.0, True), (9, 8, 0.0, False),
     ]
     rid_meta = {}
-    for n, max_new, temp in specs:
-        prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+    for n, max_new, temp, share in specs:
+        tail = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        prompt = np.concatenate([system, tail]) if share else tail
         rid = eng.submit(prompt, max_new,
-                         sampler=SamplerConfig(temperature=temp))
-        rid_meta[rid] = (n, max_new, temp)
-        print(f"submitted rid={rid}  prompt={n} tok  budget={max_new}"
-              f"  T={temp}")
+                         sampler=SamplerConfig(temperature=temp),
+                         prefix_id="system" if share else None)
+        rid_meta[rid] = (len(prompt), max_new, temp)
+        print(f"submitted rid={rid}  prompt={len(prompt)} tok  "
+              f"budget={max_new}  T={temp}"
+              f"{'  [shared prefix]' if share else ''}")
 
     print("\n--- streaming ---")
     streams: dict[int, list[int]] = {rid: [] for rid in rid_meta}

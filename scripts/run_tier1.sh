@@ -23,6 +23,44 @@ mkdir -p "$RESULTS_DIR"
 rm -f "$RESULTS_DIR"/*.xml "$RESULTS_DIR"/*.log   # never count a stale run
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# --- docs-link gate: every relative link in docs/*.md + README.md and every
+# examples/ or benchmarks/ path referenced in docs must exist, so the docs
+# cannot rot silently as the tree moves under them
+python - <<'PY'
+import os
+import re
+import sys
+
+errors = []
+doc_files = ["README.md"] if os.path.exists("README.md") else []
+if os.path.isdir("docs"):
+    doc_files += sorted(os.path.join("docs", f) for f in os.listdir("docs")
+                        if f.endswith(".md"))
+if not doc_files:
+    print("DOCS-LINKS: no docs found")
+    sys.exit(1)
+for path in doc_files:
+    base = os.path.dirname(path)
+    text = open(path, encoding="utf-8").read()
+    # markdown links, skipping absolute URLs and intra-page anchors
+    for target in re.findall(r"\]\(([^)#][^)]*)\)", text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#")[0]
+        if target and not os.path.exists(os.path.join(base, target)):
+            errors.append(f"{path}: broken link -> {target}")
+    # bare examples/ and benchmarks/ path mentions (inline code etc.)
+    for target in set(re.findall(r"(?:examples|benchmarks|scripts)/"
+                                 r"[\w./-]+\.(?:py|sh)", text)):
+        if not os.path.exists(target):
+            errors.append(f"{path}: missing path -> {target}")
+for e in errors:
+    print("DOCS-LINKS:", e)
+print(f"DOCS-LINKS files={len(doc_files)} errors={len(errors)}")
+sys.exit(1 if errors else 0)
+PY
+link_rc=$?
+
 timeouts=0
 for f in tests/test_*.py; do
     name=$(basename "$f" .py)
@@ -35,7 +73,7 @@ for f in tests/test_*.py; do
     fi
 done
 
-python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" <<'PY'
+python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" "$link_rc" <<'PY'
 import glob
 import os
 import sys
@@ -43,6 +81,7 @@ import xml.etree.ElementTree as ET
 
 results_dir, timeouts, baseline_path = (sys.argv[1], int(sys.argv[2]),
                                         sys.argv[3])
+link_errors = int(sys.argv[4])
 tests = passed = failed = errors = skipped = files = 0
 for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     files += 1
@@ -58,9 +97,10 @@ for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     errors += e
     skipped += s
     passed += t - f - e - s
-red = failed + errors + timeouts
+red = failed + errors + timeouts + link_errors
 print(f"TIER1 files={files} passed={passed} failed={failed} "
-      f"errors={errors} skipped={skipped} timeout={timeouts}")
+      f"errors={errors} skipped={skipped} timeout={timeouts} "
+      f"doclinks={link_errors}")
 
 if not os.path.exists(baseline_path):
     with open(baseline_path, "w") as fh:

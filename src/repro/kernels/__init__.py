@@ -1,1 +1,1 @@
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, paged_attention, ref  # noqa: F401

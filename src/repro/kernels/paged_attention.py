@@ -1,0 +1,155 @@
+"""Pallas TPU fused dequant + paged-attention decode kernel.
+
+Why it exists: with int8 KV pages (§Perf A4 at serving scale) the decode
+hot loop is bandwidth-bound on the page pool. The pure-jnp path in
+`models.attention.attention_decode_paged` gathers the slot's pages into a
+logical ``[B, S_slot, Hkv, hd]`` view, dequantizes it, then attends —
+XLA materializes the gathered + dequantized (bf16) copy in HBM, paying
+~2.5× the pool's int8 byte traffic. This kernel reads the int8 codes and
+their float32 scale strips page-by-page straight out of the pool (the
+page table rides in scalar-prefetch memory and drives the BlockSpec
+index maps — vLLM-TPU style), dequantizes in VMEM, and carries online
+softmax state across the page grid axis, so nothing but the final
+``[B, H, hd]`` output ever leaves VMEM in float.
+
+Layout: q ``[B, Hkv, G, hd]`` (head = kv_head·G + group, matching the
+reshape in `attention_decode_paged`), pools ``[N, P, Hkv, hd]`` int8 with
+scales ``[N, P, Hkv]`` f32, page_table ``[B, pages_per_slot]`` int32,
+pos ``[B]`` int32 (last valid absolute position, inclusive). Grid
+``(B, Hkv, pages_per_slot)``, pages innermost (accumulation axis).
+
+Off-TPU the wrapper drops to `kernels.ref.paged_attention_ref`
+(numerically equal up to online-softmax reassociation); interpret mode
+runs the kernel body as a CPU program for the allclose sweeps in
+tests/test_paged_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def supported() -> bool:
+    """Whether the compiled kernel path should be used for decode."""
+    return jax.default_backend() == "tpu"
+
+
+def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
+                       q_ref, k_ref, ks_ref, v_ref, vs_ref,
+                       o_ref, m_ref, l_ref, acc_ref, *,
+                       page_size: int, n_blocks: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # [G, hd]
+    # fused dequant: int8 codes × per-(position, head) scale strip, VMEM-only
+    k = k_ref[0][:, 0].astype(jnp.float32) \
+        * ks_ref[0][:, :1].astype(jnp.float32)             # [P, hd]
+    v = v_ref[0][:, 0].astype(jnp.float32) \
+        * vs_ref[0][:, :1].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                             # [G, P]
+    s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # [G, 128] replicated
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)[:, None]                    # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, :1])                          # [G, P]
+    l_new = l_prev * alpha + jnp.broadcast_to(
+        jnp.sum(p, axis=1)[:, None], l_prev.shape)
+    acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)                    # fully masked row
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
+                    v_pool: jax.Array, vs: jax.Array,
+                    page_table: jax.Array, pos: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Fused dequant + single-token attention over int8 KV pages.
+
+    q ``[B, Hkv, G, hd]``; k/v pools ``[N, P, Hkv, hd]`` int8; ks/vs
+    ``[N, P, Hkv]`` f32; page_table ``[B, pages_per_slot]`` int32; pos
+    ``[B]`` int32 (inclusive last valid position — the just-written
+    token). Returns ``[B, Hkv, G, hd]`` float32. Pages past the valid
+    range may map to the scratch page; their positions exceed ``pos`` and
+    are masked, so stale table entries never leak into the softmax.
+    """
+    b, hkv, g, hd = q.shape
+    n_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    n_blocks = page_table.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    # pad the group dim to the fp32 sublane quantum so tiny-GQA configs
+    # (G < 8) still map onto full tiles; padded rows are sliced off below
+    gp = max(8, g)
+    if gp != g:
+        q = jnp.concatenate(
+            [q, jnp.zeros((b, hkv, gp - g, hd), q.dtype)], axis=2)
+
+    grid = (b, hkv, n_blocks)
+    kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
+                               n_blocks=n_blocks, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, gp, hd),
+                         lambda bi, hi, ji, tables, pos_: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
+                         (tables[bi * _nb + ji], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
+                         (tables[bi * _nb + ji], 0, hi)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
+                         (tables[bi * _nb + ji], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1),
+                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
+                         (tables[bi * _nb + ji], 0, hi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, hd),
+                               lambda bi, hi, ji, tables, pos_: (bi, hi, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((gp, 128), jnp.float32),
+                        pltpu.VMEM((gp, 128), jnp.float32),
+                        pltpu.VMEM((gp, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, hd), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(page_table.reshape(-1).astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_pool, ks, v_pool, vs)
+    return out[:, :, :g]

@@ -49,6 +49,33 @@ def awq_gateup_ref(x: jax.Array, qw_gate, s_gate, z_gate, qw_up, s_up, z_up,
     return jax.nn.silu(g) * u
 
 
+def paged_attention_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
+                        scale=None):
+    """Oracle for the fused dequant + paged-attention decode kernel.
+
+    q [B, Hkv, G, hd]; k/v pools [N, P, Hkv, hd] int8; ks/vs [N, P, Hkv]
+    f32 scale strips; page_table [B, pages_per_slot] int32; pos [B] int32
+    (inclusive last valid position). Gathers the slot's pages into logical
+    order, dequantizes, then runs plain masked softmax attention —
+    exactly the jnp fallback path in `models.attention`.
+    """
+    b, hkv, g, hd = q.shape
+    page_size = k_pool.shape[1]
+    s_slot = page_table.shape[1] * page_size
+    scale = scale if scale is not None else hd ** -0.5
+    k = (k_pool.astype(jnp.float32)
+         * ks[..., None].astype(jnp.float32))[page_table]
+    v = (v_pool.astype(jnp.float32)
+         * vs[..., None].astype(jnp.float32))[page_table]
+    k = k.reshape(b, s_slot, hkv, hd)
+    v = v.reshape(b, s_slot, hkv, hd)
+    sc = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32), k) * scale
+    valid = jnp.arange(s_slot)[None, :] <= pos[:, None]    # [B, S]
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v)
+
+
 def flash_attention_ref(q, k, v, *, scale=None, causal=True,
                         window: int = 0):
     """Oracle for the flash kernel: plain masked softmax attention.

@@ -233,17 +233,24 @@ def fill_cache_from_prefill(cache, k, v, positions, window: int):
 
 
 def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
-                        dtype=jnp.bfloat16):
+                        dtype=jnp.bfloat16, kv_quant: str | None = None):
     """Page pool for one layer: ``[num_pages, page_size, Hkv, hd]``.
 
-    Physical pages are owned exclusively by one request slot (the pager's
-    invariant); logical order is reconstructed at read time by gathering
-    through the per-slot page table. Page 0 is the pager's scratch page —
-    inactive slots keep scattering into it so the jit'd decode step never
+    Physical pages are normally owned by one request slot; prefix sharing
+    lets several slots alias read-only pages (the pager refcounts them).
+    Logical order is reconstructed at read time by gathering through the
+    per-slot page table. Page 0 is the pager's scratch page — inactive
+    slots keep scattering into it so the jit'd decode step never
     re-specializes on batch composition.
+
+    ``kv_quant`` overrides ``cfg.kv_quant`` for the pool only (the serving
+    engine uses this to hold int8 pages under a float model config —
+    quantize-on-commit / dequant-on-gather): int8 codes plus per-(position,
+    head) float32 absmax scale strips ``ks``/``vs``.
     """
+    kv_quant = cfg.kv_quant if kv_quant is None else kv_quant
     shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
-    if cfg.kv_quant == "int8":
+    if kv_quant == "int8":
         sshape = (num_pages, page_size, cfg.num_kv_heads)
         return {"k": jnp.zeros(shape, jnp.int8),
                 "v": jnp.zeros(shape, jnp.int8),
@@ -259,7 +266,13 @@ def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     int32 (physical page per logical block); x ``[B, D]``, pos ``[B]``.
     Returns (y [B, D], new pool). The gathered logical view is laid out
     exactly like the dense ``[B, S, Hkv, hd]`` cache, so paged and dense
-    decode produce bitwise-identical attention outputs.
+    decode produce bitwise-identical attention outputs (same kv regime).
+
+    Int8 pools quantize the new token on write (same codec as
+    quantize-on-commit) and dequantize at the point of use: on TPU via
+    the fused Pallas kernel (`kernels.paged_attention` — page table in
+    scalar-prefetch memory, dequant in VMEM), elsewhere via the jnp
+    gather below, which doubles as the kernel's reference semantics.
     """
     b = x.shape[0]
     q, k1, v1 = _project_qkv(p, x, cfg, pos, 0, name)       # [B, H(kv), hd]
@@ -277,6 +290,23 @@ def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     new_pool["k"] = pool["k"].at[phys, offset].set(k1.astype(pool["k"].dtype))
     new_pool["v"] = pool["v"].at[phys, offset].set(v1.astype(pool["v"].dtype))
 
+    g = cfg.num_heads // cfg.num_kv_heads
+    if quant:
+        from repro.kernels import paged_attention as paged_kernel
+        if paged_kernel.supported():
+            # fused Pallas path: int8 codes + scale strips dequantized in
+            # VMEM, page table in scalar-prefetch memory — the gathered
+            # float copy of the cache never touches HBM
+            qk = q.reshape(b, cfg.num_kv_heads, g, cfg.head_dim)
+            out = paged_kernel.paged_attention(
+                qk, new_pool["k"], new_pool["ks"], new_pool["v"],
+                new_pool["vs"], page_table, pos,
+                scale=cfg.head_dim ** -0.5)
+            out = out.reshape(b, cfg.q_dim).astype(
+                jnp.dtype(cfg.activation_dtype))
+            nm = (lambda s_: None) if name is None else name
+            return linear(p["wo"], out, nm("wo")), new_pool
+
     # gather-based read: page table → logical [B, S_slot, Hkv, hd] view
     s_slot = page_table.shape[1] * page_size
     ck = new_pool["k"][page_table].reshape(b, s_slot, cfg.num_kv_heads,
@@ -291,7 +321,6 @@ def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
         cv = _kv_dequant(cv, vs, adt)
     k_pos = jnp.where(jnp.arange(s_slot)[None, :] <= pos[:, None],
                       jnp.arange(s_slot)[None, :], -1)
-    g = cfg.num_heads // cfg.num_kv_heads
     qg = q.reshape(b, 1, cfg.num_kv_heads, g, cfg.head_dim)
     out = _sdpa(qg, ck, cv, pos[:, None], k_pos, causal=False, window=0,
                 scale=cfg.head_dim ** -0.5)

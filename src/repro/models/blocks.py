@@ -81,7 +81,7 @@ def init_block_cache(cfg, kind: LayerKind, batch: int, max_seq: int,
 
 def init_block_cache_paged(cfg, kind: LayerKind, num_slots: int,
                            num_pages: int, page_size: int, slot_seq: int,
-                           dtype=jnp.bfloat16):
+                           dtype=jnp.bfloat16, kv_quant: str | None = None):
     """Per-layer decode cache for the continuous-batching engine.
 
     Unbounded full-attention KV goes into a shared **page pool** (key
@@ -89,6 +89,9 @@ def init_block_cache_paged(cfg, kind: LayerKind, num_slots: int,
     sliding-window rings, SSM states, MLA latents — stays dense with the
     slot index as the batch dim, since its footprint is fixed per slot.
     ``slot_seq`` is the per-slot capacity (pages_per_slot × page_size).
+    ``kv_quant`` overrides ``cfg.kv_quant`` for the page pools only (the
+    engine's serving-scale KV quantization knob); bounded dense state
+    keeps the config's regime.
     """
     c: dict = {}
     if kind.mixer in ("attn", "hymba"):
@@ -96,8 +99,8 @@ def init_block_cache_paged(cfg, kind: LayerKind, num_slots: int,
             c["kv"] = attn_mod.init_kv_cache(cfg, num_slots, slot_seq,
                                              kind.window, dtype)
         else:
-            c["kv_pool"] = attn_mod.init_paged_kv_cache(cfg, num_pages,
-                                                        page_size, dtype)
+            c["kv_pool"] = attn_mod.init_paged_kv_cache(
+                cfg, num_pages, page_size, dtype, kv_quant=kv_quant)
     if kind.mixer == "mla":
         c["mla"] = mla_mod.init_mla_cache(cfg, num_slots, slot_seq, dtype)
     if kind.mixer in ("mamba", "hymba"):

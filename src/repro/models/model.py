@@ -144,10 +144,17 @@ class Model:
 
     def init_paged_cache(self, num_slots: int, num_pages: int,
                          page_size: int, slot_seq: int,
-                         dtype=jnp.bfloat16) -> Any:
-        """Decode cache for the continuous-batching engine (serving/)."""
+                         dtype=jnp.bfloat16,
+                         kv_quant: str | None = None) -> Any:
+        """Decode cache for the continuous-batching engine (serving/).
+
+        ``kv_quant`` ("none" | "int8" | None = follow ``cfg.kv_quant``)
+        selects the page-pool storage regime independently of the model
+        config — the serving engine's KV-quantization knob.
+        """
         return stack.stack_init_paged_cache(self.cfg, num_slots, num_pages,
-                                            page_size, slot_seq, dtype)
+                                            page_size, slot_seq, dtype,
+                                            kv_quant=kv_quant)
 
     def prefill(self, params, batch: dict, cache: Any
                 ) -> tuple[Any, jax.Array, jax.Array]:

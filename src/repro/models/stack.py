@@ -47,12 +47,13 @@ def stack_init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
 
 def stack_init_paged_cache(cfg, num_slots: int, num_pages: int,
                            page_size: int, slot_seq: int,
-                           dtype=jnp.bfloat16):
+                           dtype=jnp.bfloat16, kv_quant: str | None = None):
     """Paged decode cache: page pools (full attention) + per-slot state."""
     out = {}
     for si, (kind, n) in enumerate(cfg.segments()):
         one = blocks.init_block_cache_paged(cfg, kind, num_slots, num_pages,
-                                            page_size, slot_seq, dtype)
+                                            page_size, slot_seq, dtype,
+                                            kv_quant=kv_quant)
         out[seg_name(si)] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (n,) + a.shape).copy(), one)
     return out

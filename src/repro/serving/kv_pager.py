@@ -1,4 +1,5 @@
-"""Paged KV cache: fixed-size pages, per-request page tables, alloc/free.
+"""Paged KV cache: fixed-size pages, per-request page tables, alloc/free,
+refcounted prefix sharing.
 
 The dense decode cache sizes every request at ``max_seq`` — a 16-slot
 engine at 32k context holds 512k tokens of KV even when serving 16
@@ -10,24 +11,47 @@ splits KV into fixed ``page_size``-token pages drawn from a shared pool:
     token's K/V into ``pool[table[slot, pos // P], pos % P]`` and reads by
     gathering ``pool[table[slot]]`` back into logical order. All shapes are
     fixed, so the jit'd decode step never re-specializes as requests come
-    and go.
-  * host side — `KVPager` owns the free list and the ``[num_slots,
-    pages_per_slot]`` page tables. Pages are exclusively owned by one slot;
-    **page 0 is a reserved scratch page** that inactive slots keep writing
-    into, which is what lets finished rows ride along in the fixed batch.
+    and go. Quantized pools (``kv_quant="int8"``) store int8 codes plus
+    per-(position, head) float32 scale strips ``ks``/``vs``.
+  * host side — `KVPager` owns the free list, the ``[num_slots,
+    pages_per_slot]`` page tables, and a per-page **refcount**. Pages are
+    normally owned by one slot; prefix sharing lets several slots alias
+    the same read-only full pages (see below). **Page 0 is a reserved
+    scratch page** that inactive slots keep writing into, which is what
+    lets finished rows ride along in the fixed batch.
+
+Prefix sharing (refcount + content-hash index):
+
+  * requests submitted with a ``prefix_id`` participate in sharing. The
+    pager keeps a chain-hash index: the key of logical page ``i`` is
+    ``sha1(key(i-1) || tokens[i*P:(i+1)*P])``, seeded with the prefix_id —
+    a hit means the exact same token prefix, so the page's committed KV is
+    identical and can be aliased read-only (refcount += 1).
+  * only **full** pages are ever shared. The partial tail page (prefix
+    tokens + the request's own tokens) is always freshly allocated and
+    privately rewritten by the aliasing request — copy-on-write resolved
+    at admission time, since the token ranges that could ever be written
+    later (decode positions ≥ prompt_len) never land in a shared page.
+  * `free_slot` decrements refcounts and returns a page to the free list
+    exactly once, when its last owner releases it; the index entry dies
+    with the page.
 
 Admission control is conservative: a request is admitted only if its
-worst-case footprint (prompt + max_new − 1 tokens) can be covered by free
-plus already-reserved pages, so `extend` during decode can never fail.
+worst-case footprint (prompt + max_new − 1 tokens, minus aliased pages)
+can be covered by free plus already-reserved pages, so `extend` during
+decode can never fail.
 
 `commit_prefill` is the device-side bridge from a per-request dense
 prefill cache (``model.prefill`` output, batch 1, seq = prompt length) into
 the paged/slot caches; it is shape-polymorphic and meant to be jit'd per
-prompt length by the engine.
+(prompt length, shared-page count) by the engine. When the pool is int8
+but the prefill cache is float, K/V are **quantized on commit**; aliased
+prefix pages are skipped (``start_page``).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,8 +69,15 @@ class PagerConfig:
     pages_per_slot: int   # logical blocks per slot (slot capacity / P)
 
 
+def _chain_key(prev: bytes, chunk: np.ndarray) -> bytes:
+    h = hashlib.sha1(prev)
+    h.update(np.ascontiguousarray(chunk, np.int32).tobytes())
+    return h.digest()
+
+
 class KVPager:
-    """Host-side page-table + free-list accounting (no device arrays)."""
+    """Host-side page-table + free-list + refcount accounting (no device
+    arrays)."""
 
     def __init__(self, cfg: PagerConfig):
         if cfg.num_pages < 2:
@@ -61,6 +92,11 @@ class KVPager:
         self.slot_reserved: dict[int, int] = {}
         self.slot_len = np.zeros(cfg.num_slots, np.int64)
         self._reserved = 0   # pages promised to active slots, not yet drawn
+        # per-page owner count: 0 = free, 1 = exclusive, >1 = prefix-shared
+        self.page_ref = np.zeros(cfg.num_pages, np.int32)
+        # chain-hash → physical page holding that exact token prefix chunk
+        self.prefix_index: dict[bytes, int] = {}
+        self._page_key: dict[int, bytes] = {}
         # bumped on every page-table mutation; lets the engine cache the
         # device copy of the tables instead of re-uploading each step
         self.version = 0
@@ -72,7 +108,18 @@ class KVPager:
 
     @property
     def pages_in_use(self) -> int:
+        """Physical pages drawn from the pool (aliased pages count once)."""
         return self.cfg.num_pages - 1 - len(self.free_pages)
+
+    @property
+    def logical_pages_in_use(self) -> int:
+        """Sum of per-slot mapped pages (aliased pages count per owner)."""
+        return sum(len(p) for p in self.slot_pages.values())
+
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently aliased by more than one slot."""
+        return int((self.page_ref > 1).sum())
 
     @property
     def num_free_slots(self) -> int:
@@ -93,29 +140,89 @@ class KVPager:
         return (need <= self.cfg.pages_per_slot
                 and need <= self.cfg.num_pages - 1)
 
-    def can_admit(self, prompt_len: int, max_new_tokens: int) -> bool:
+    def can_admit(self, prompt_len: int, max_new_tokens: int,
+                  n_shared: int = 0) -> bool:
         total = prompt_len + max_new_tokens - 1
         return (bool(self.free_slots)
                 and self.fits(prompt_len, max_new_tokens)
                 and (len(self.free_pages) - self._reserved
-                     >= self.pages_for(total)))
+                     >= self.pages_for(total) - n_shared))
 
-    def alloc_slot(self, prompt_len: int, max_new_tokens: int
+    # ------------------------------------------------------- prefix sharing
+    def match_prefix(self, tokens, prefix_id) -> list[int]:
+        """Longest chain of already-committed full pages holding ``tokens``.
+
+        Returns the physical pages (logical order) whose content-hash chain
+        matches the prompt's full-page prefix under ``prefix_id``'s
+        namespace. Only full pages match — the partial tail is never shared.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        p = self.cfg.page_size
+        key = repr(prefix_id).encode()
+        pages: list[int] = []
+        for i in range(len(tokens) // p):
+            key = _chain_key(key, tokens[i * p:(i + 1) * p])
+            page = self.prefix_index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
+    def register_prefix(self, slot: int, tokens, prefix_id) -> int:
+        """Index ``slot``'s committed full-prompt pages for future sharing.
+
+        Idempotent per chunk: pages already indexed (including ones this
+        slot aliased) are left alone. Returns the number of newly indexed
+        pages.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        p = self.cfg.page_size
+        key = repr(prefix_id).encode()
+        pages = self.slot_pages[slot]
+        added = 0
+        for i in range(len(tokens) // p):
+            key = _chain_key(key, tokens[i * p:(i + 1) * p])
+            if key not in self.prefix_index:
+                self.prefix_index[key] = pages[i]
+                self._page_key[pages[i]] = key
+                added += 1
+        return added
+
+    def alloc_slot(self, prompt_len: int, max_new_tokens: int,
+                   shared_pages: list[int] | None = None
                    ) -> tuple[int, list[int]]:
         """Place a request: returns (slot, physical pages for the prompt).
 
-        Reserves (but does not draw) the pages decode will need, so later
-        `extend` calls cannot fail.
+        ``shared_pages`` (from `match_prefix`) are aliased read-only
+        (refcount += 1) instead of drawn from the free list; the remainder
+        is freshly allocated. Reserves (but does not draw) the pages decode
+        will need, so later `extend` calls cannot fail.
         """
-        if not self.can_admit(prompt_len, max_new_tokens):
+        shared = list(shared_pages or [])
+        if not self.can_admit(prompt_len, max_new_tokens,
+                              n_shared=len(shared)):
             raise PageAllocationError(
                 f"cannot admit prompt_len={prompt_len} "
                 f"max_new={max_new_tokens}: free_slots={len(self.free_slots)}"
                 f" free_pages={len(self.free_pages)} reserved={self._reserved}")
-        slot = self.free_slots.pop()
         total = self.pages_for(prompt_len + max_new_tokens - 1)
         now = self.pages_for(prompt_len)
-        pages = [self.free_pages.pop() for _ in range(now)]
+        # validate the alias list BEFORE mutating any state: callers catch
+        # PageAllocationError for capacity rejection, so an error path must
+        # not leak the popped slot or partial refcount increments
+        if len(shared) > now:
+            raise PageAllocationError(
+                f"{len(shared)} shared pages exceed the {now}-page prompt")
+        for pg in shared:
+            if self.page_ref[pg] < 1:
+                raise PageAllocationError(f"aliasing unowned page {pg}")
+        slot = self.free_slots.pop()
+        for pg in shared:
+            self.page_ref[pg] += 1
+        fresh = [self.free_pages.pop() for _ in range(now - len(shared))]
+        for pg in fresh:
+            self.page_ref[pg] = 1
+        pages = shared + fresh
         self.slot_pages[slot] = pages
         self.page_tables[slot, :now] = pages
         self.version += 1
@@ -135,6 +242,7 @@ class KVPager:
                 raise PageAllocationError(
                     f"slot {slot} grew past its reservation ({new_len})")
             page = self.free_pages.pop()
+            self.page_ref[page] = 1
             self.page_tables[slot, len(pages)] = page
             pages.append(page)
             self.version += 1
@@ -143,8 +251,18 @@ class KVPager:
         self.slot_len[slot] = max(int(self.slot_len[slot]), new_len)
 
     def free_slot(self, slot: int) -> None:
-        """Return a finished request's pages + slot; resets table to scratch."""
-        self.free_pages.extend(self.slot_pages.pop(slot))
+        """Release a finished request: refcount-- on every mapped page; a
+        page returns to the free list exactly once, when its last owner
+        lets go (its prefix-index entry dies with it)."""
+        for pg in self.slot_pages.pop(slot):
+            self.page_ref[pg] -= 1
+            if self.page_ref[pg] == 0:
+                self.free_pages.append(pg)
+                key = self._page_key.pop(pg, None)
+                if key is not None:
+                    self.prefix_index.pop(key, None)
+            elif self.page_ref[pg] < 0:
+                raise RuntimeError(f"page {pg} double-freed")
         self._reserved -= self.slot_reserved.pop(slot, 0)
         self.page_tables[slot, :] = 0
         self.slot_len[slot] = 0
@@ -156,20 +274,31 @@ class KVPager:
 # Device-side commit: dense per-request prefill cache → paged / slot caches
 # ---------------------------------------------------------------------------
 
-def _commit_paged_leaf(pool, pre, phys_pages, page_size: int):
-    """pre [L, 1, S, ...] → scatter into pool [L, num_pages, P, ...]."""
+def _commit_paged_leaf(pool, pre, phys_pages, page_size: int,
+                       start_page: int = 0):
+    """pre [L, 1, S, ...] → scatter into pool [L, num_pages, P, ...].
+
+    ``start_page`` skips the leading aliased prefix pages: their content is
+    already in the pool (committed by the request that registered the
+    prefix) and they may be shared read-only with other slots.
+    """
     lead = pre.shape[0]
     s = pre.shape[2]
     rest = pre.shape[3:]
-    pre = pre[:, 0].astype(pool.dtype)                    # [L, S, ...]
-    full = s // page_size
-    rem = s % page_size
+    skip = start_page * page_size
+    if skip >= s:
+        return pool
+    pre = pre[:, 0, skip:].astype(pool.dtype)             # [L, S - skip, ...]
+    n = s - skip
+    pages = phys_pages[start_page:]
+    full = n // page_size
+    rem = n % page_size
     if full:
         body = pre[:, :full * page_size].reshape(
             (lead, full, page_size) + rest)
-        pool = pool.at[:, phys_pages[:full]].set(body)
+        pool = pool.at[:, pages[:full]].set(body)
     if rem:
-        pool = pool.at[:, phys_pages[full], :rem].set(pre[:, full * page_size:])
+        pool = pool.at[:, pages[full], :rem].set(pre[:, full * page_size:])
     return pool
 
 
@@ -189,14 +318,36 @@ def _commit_ring_leaf(slot_cache, pre, slot):
     return slot_cache.at[:, slot].set(row)
 
 
+def _adapt_kv_quant(pre_kv: dict, pool: dict) -> dict:
+    """Bridge dtype regimes between the dense prefill cache and the pool.
+
+    * pool int8, prefill float  → **quantize on commit** (per-(pos, head)
+      absmax scales, same codec as the decode write path),
+    * pool float, prefill int8  → dequantize on commit,
+    * matching regimes          → pass through.
+    """
+    from repro.models.attention import _kv_dequant, _kv_quantize
+    pool_q, pre_q = "ks" in pool, "ks" in pre_kv
+    if pool_q and not pre_q:
+        k, ks = _kv_quantize(pre_kv["k"])
+        v, vs = _kv_quantize(pre_kv["v"])
+        return {"k": k, "v": v, "ks": ks, "vs": vs}
+    if pre_q and not pool_q:
+        return {"k": _kv_dequant(pre_kv["k"], pre_kv["ks"], pool["k"].dtype),
+                "v": _kv_dequant(pre_kv["v"], pre_kv["vs"], pool["v"].dtype)}
+    return pre_kv
+
+
 def commit_prefill(cache, prefill_cache, slot, phys_pages, *,
-                   page_size: int):
+                   page_size: int, start_page: int = 0):
     """Merge one request's prefill cache into the shared paged cache.
 
     ``cache``: `Model.init_paged_cache` pytree; ``prefill_cache``: the
     populated `Model.init_cache(1, prompt_len)` pytree; ``slot`` int32
-    scalar; ``phys_pages`` [pages_for(prompt_len)] int32. Pure function —
-    jit per prompt length with cache donated.
+    scalar; ``phys_pages`` [pages_for(prompt_len)] int32; ``start_page``
+    static int — the first ``start_page`` pages are prefix-shared aliases
+    and are not rewritten (per-slot dense state is always written). Pure
+    function — jit per (prompt length, start_page) with cache donated.
     """
     out = {}
     for seg, entry in cache.items():
@@ -204,9 +355,11 @@ def commit_prefill(cache, prefill_cache, slot, phys_pages, *,
         new_entry = {}
         for kind_key, leaves in entry.items():
             if kind_key == "kv_pool":
+                pre_kv = _adapt_kv_quant(pre_entry["kv"], leaves)
                 new_entry[kind_key] = {
-                    k: _commit_paged_leaf(leaves[k], pre_entry["kv"][k],
-                                          phys_pages, page_size)
+                    k: _commit_paged_leaf(leaves[k], pre_kv[k],
+                                          phys_pages, page_size,
+                                          start_page=start_page)
                     for k in leaves}
             elif kind_key == "kv":         # sliding-window ring, per slot
                 new_entry[kind_key] = {

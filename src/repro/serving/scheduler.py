@@ -40,6 +40,7 @@ class Request:
     temperature: float = 0.0      # 0 ⇒ greedy
     top_k: int = 0                # 0 ⇒ full softmax
     eos_id: int = -1              # -1 ⇒ never stops early
+    prefix_id: str | None = None  # opt into prefix sharing (namespace key)
 
 
 @dataclasses.dataclass
@@ -67,19 +68,22 @@ class SchedulerStats:
     decode_steps: int = 0
     slot_tokens: int = 0          # useful tokens produced by decode rows
     slot_steps: int = 0           # total rows dispatched (incl. idle)
+    prefix_shared_pages: int = 0  # pages aliased instead of allocated
 
 
 class Scheduler:
     """Queue + slot bookkeeping over an executor's jit'd prefill/decode."""
 
     def __init__(self, pager: KVPager, *,
-                 prefill_commit: Callable[[Request, int, list[int]], int],
+                 prefill_commit: Callable[[Request, int, list[int], int],
+                                          int],
                  decode: Callable[[np.ndarray, np.ndarray, np.ndarray,
                                    np.ndarray, np.ndarray], np.ndarray]):
         self.pager = pager
         self.num_slots = pager.cfg.num_slots
-        # prefill_commit(request, slot, pages) → first sampled token; the
-        # engine fuses prefill + page commit + sampling into one dispatch
+        # prefill_commit(request, slot, pages, n_shared) → first sampled
+        # token; the engine fuses prefill + page commit + sampling into one
+        # dispatch, skipping the commit of the n_shared aliased prefix pages
         self._prefill_commit = prefill_commit
         self._decode = decode
         self.queue: deque[Request] = deque()
@@ -134,12 +138,25 @@ class Scheduler:
 
     # ------------------------------------------------------------ internals
     def _admit(self, events: list[tuple[int, int]]) -> None:
-        while self.queue and self.pager.can_admit(
-                len(self.queue[0].tokens), self.queue[0].max_new_tokens):
-            req = self.queue.popleft()
+        while self.queue:
+            req = self.queue[0]
+            # prefix detection at admission: requests that opted in
+            # (prefix_id set) alias any already-resident full pages whose
+            # content-hash chain matches their prompt — those pages don't
+            # count against free capacity
+            shared = (self.pager.match_prefix(req.tokens, req.prefix_id)
+                      if req.prefix_id is not None else [])
+            if not self.pager.can_admit(len(req.tokens), req.max_new_tokens,
+                                        n_shared=len(shared)):
+                break
+            self.queue.popleft()
             slot, pages = self.pager.alloc_slot(len(req.tokens),
-                                                req.max_new_tokens)
-            tok = int(self._prefill_commit(req, slot, pages))
+                                                req.max_new_tokens,
+                                                shared_pages=shared)
+            tok = int(self._prefill_commit(req, slot, pages, len(shared)))
+            if req.prefix_id is not None:
+                self.pager.register_prefix(slot, req.tokens, req.prefix_id)
+            self.stats.prefix_shared_pages += len(shared)
             st = _SlotState(request=req, generated=[tok])
             self.slots[slot] = st
             self.stats.admitted += 1

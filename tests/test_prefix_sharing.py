@@ -1,0 +1,210 @@
+"""Refcounted prefix sharing: pager invariants + end-to-end token identity."""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+from repro.serving import GenerationEngine
+from repro.serving.kv_pager import KVPager, PageAllocationError, PagerConfig
+
+
+def _pager(num_pages=17, page_size=4, num_slots=4, pages_per_slot=4):
+    return KVPager(PagerConfig(num_pages=num_pages, page_size=page_size,
+                               num_slots=num_slots,
+                               pages_per_slot=pages_per_slot))
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pager-level refcount / index invariants
+# ---------------------------------------------------------------------------
+
+def test_alias_refcount_and_exactly_once_free():
+    p = _pager()
+    prompt = _toks(*range(10))                  # 2 full pages + 2-token tail
+    s_a, pages_a = p.alloc_slot(10, 3)
+    p.register_prefix(s_a, prompt, "sys")
+    shared = p.match_prefix(prompt, "sys")
+    assert shared == pages_a[:2]                # full pages only, in order
+
+    s_b, pages_b = p.alloc_slot(10, 3, shared_pages=shared)
+    assert pages_b[:2] == pages_a[:2]           # aliased
+    assert pages_b[2] != pages_a[2]             # COW tail page is private
+    assert p.page_ref[pages_a[0]] == 2 and p.page_ref[pages_a[1]] == 2
+    assert p.shared_pages == 2
+    # physical vs logical accounting: 4 physical pages back 6 logical ones
+    assert p.pages_in_use == 4
+    assert p.logical_pages_in_use == 6
+
+    free_before = p.num_free_pages
+    p.free_slot(s_a)                            # B still holds the prefix
+    assert p.page_ref[pages_a[0]] == 1
+    assert p.num_free_pages == free_before + 1  # only A's tail page returned
+    assert p.match_prefix(prompt, "sys") == shared  # index survives
+
+    p.free_slot(s_b)                            # last owner: pages freed once
+    assert p.pages_in_use == 0
+    assert (p.page_ref == 0).all()
+    assert len(set(p.free_pages)) == len(p.free_pages)  # no double entries
+    assert not p.prefix_index                   # index died with the pages
+    assert p.match_prefix(prompt, "sys") == []
+
+
+def test_prefix_id_namespaces_do_not_cross_match():
+    p = _pager()
+    prompt = _toks(*range(8))
+    s_a, _ = p.alloc_slot(8, 2)
+    p.register_prefix(s_a, prompt, "alice")
+    assert p.match_prefix(prompt, "alice")
+    assert p.match_prefix(prompt, "bob") == []
+    assert p.match_prefix(prompt, None) == []
+
+
+def test_match_is_content_addressed():
+    p = _pager()
+    s_a, _ = p.alloc_slot(8, 2)
+    p.register_prefix(s_a, _toks(*range(8)), "sys")
+    # same id, different tokens → chain key diverges at page 0
+    assert p.match_prefix(_toks(*range(1, 9)), "sys") == []
+    # shared first page, different second page → partial match
+    mixed = _toks(0, 1, 2, 3, 9, 9, 9, 9)
+    assert len(p.match_prefix(mixed, "sys")) == 1
+
+
+def test_partial_tail_never_shared():
+    p = _pager()
+    s_a, pages_a = p.alloc_slot(6, 2)           # 1 full + 1 partial page
+    p.register_prefix(s_a, _toks(*range(6)), "sys")
+    shared = p.match_prefix(_toks(*range(6)), "sys")
+    assert shared == pages_a[:1]                # the 2-token tail page is not
+    assert pages_a[1] not in shared
+
+
+def test_admission_accounts_for_aliased_pages():
+    # 5 usable pages, P=4: two 16-token requests cannot coexist unshared,
+    # but CAN when 3 of the 4 pages alias
+    p = _pager(num_pages=6, page_size=4, num_slots=2, pages_per_slot=4)
+    prompt = _toks(*range(16))
+    s_a, _ = p.alloc_slot(16, 1)
+    p.register_prefix(s_a, prompt, "sys")
+    assert not p.can_admit(16, 1)                       # 4 fresh: impossible
+    shared = p.match_prefix(prompt, "sys")
+    assert len(shared) == 4
+    assert p.can_admit(16, 1, n_shared=len(shared))     # 0 fresh: fits
+    s_b, pages_b = p.alloc_slot(16, 1, shared_pages=shared)
+    assert p.pages_in_use == 4                          # still only 4 physical
+    p.free_slot(s_a)
+    p.free_slot(s_b)
+    assert p.pages_in_use == 0 and (p.page_ref == 0).all()
+
+
+def test_alias_of_unowned_page_rejected():
+    p = _pager()
+    s_a, pages_a = p.alloc_slot(4, 1)
+    with pytest.raises(PageAllocationError):
+        # first page owned, second never allocated — rejected atomically
+        p.alloc_slot(8, 2, shared_pages=[pages_a[0], 3])
+    # the failed alloc leaked nothing: no slot, no refcounts, no pages
+    assert p.num_free_slots == p.cfg.num_slots - 1
+    assert p.page_ref[pages_a[0]] == 1 and p.page_ref[3] == 0
+    p.free_slot(s_a)
+    assert p.pages_in_use == 0 and (p.page_ref == 0).all()
+
+
+def test_extend_pages_are_private():
+    p = _pager()
+    prompt = _toks(*range(8))
+    s_a, _ = p.alloc_slot(8, 6)                 # reserves a decode page
+    p.register_prefix(s_a, prompt, "sys")
+    p.extend(s_a, 12)                           # decode grows past the prompt
+    grown = p.slot_pages[s_a][-1]
+    assert p.page_ref[grown] == 1
+    # the grown page is not in the prefix index — only committed prompt
+    # pages are shareable
+    assert grown not in p._page_key
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: shared-prefix greedy streams ≡ unshared streams
+# ---------------------------------------------------------------------------
+
+def _engine(m, params, **kw):
+    return GenerationEngine(m, params, max_seq=64, num_slots=4,
+                            page_size=8, **kw)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _shared_workload(cfg, prefix_len=16, tail_len=6, n=4, seed=7):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+    return [np.concatenate([prefix,
+                            rng.integers(0, cfg.vocab_size, (tail_len,)
+                                         ).astype(np.int32)])
+            for _ in range(n)]
+
+
+@pytest.mark.parametrize("kv_quant", ["none", "int8"])
+def test_shared_prefix_streams_token_identical(model_and_params, kv_quant):
+    cfg, m, params = model_and_params
+    prompts = _shared_workload(cfg)
+
+    def run(prefix_id):
+        eng = _engine(m, params, kv_quant=kv_quant)
+        rids = [eng.submit(p, 8, prefix_id=prefix_id) for p in prompts]
+        out = eng.drain()
+        return [list(out[r]) for r in rids], eng._scheduler
+
+    shared, sched_s = run("sys")
+    unshared, sched_u = run(None)
+    assert shared == unshared
+    assert sched_s.stats.prefix_shared_pages > 0
+    assert sched_u.stats.prefix_shared_pages == 0
+    # all pages returned exactly once after drain
+    for sched in (sched_s, sched_u):
+        assert sched.pager.pages_in_use == 0
+        assert (sched.pager.page_ref == 0).all()
+
+
+def test_shared_prefix_matches_sequential_generate(model_and_params):
+    import jax.numpy as jnp
+    cfg, m, params = model_and_params
+    prompts = _shared_workload(cfg, prefix_len=16, tail_len=5, n=3, seed=9)
+    eng = _engine(m, params)
+    rids = [eng.submit(p, 8, prefix_id="sys") for p in prompts]
+    out = eng.drain()
+    for p, rid in zip(prompts, rids):
+        ref = eng.generate({"tokens": jnp.asarray(p)[None, :]}, 8)[0]
+        np.testing.assert_array_equal(out[rid], ref[: len(out[rid])])
+
+
+def test_sharing_raises_concurrency_at_fixed_budget(model_and_params):
+    """The capacity claim: with a page pool sized so that unshared requests
+    queue, prefix sharing admits the whole burst at once."""
+    cfg, m, params = model_and_params
+    prompts = _shared_workload(cfg, prefix_len=16, tail_len=6, n=4)
+    # each request: 22+7 tokens ⇒ 4 pages worst case (P=8). Pool of 11
+    # usable pages fits 2 unshared requests (8 pages) but 4 shared ones
+    # (2 aliased + 2 private each ⇒ 2 + 4·2 = 10 pages).
+    def peak_active(prefix_id):
+        eng = GenerationEngine(m, params, max_seq=32, num_slots=4,
+                               page_size=8, num_pages=12)
+        for p in prompts:
+            eng.submit(p, 8, prefix_id=prefix_id)
+        peak = 0
+        while not eng.idle:
+            eng.step()
+            peak = max(peak, eng.num_active)
+        return peak
+
+    assert peak_active(None) <= 2
+    assert peak_active("sys") == 4

@@ -22,8 +22,8 @@ class _FakeExec:
         self.prefills = []
         self.decode_calls = 0
 
-    def prefill_commit(self, req, slot, pages):
-        self.prefills.append((len(req.tokens), slot, tuple(pages)))
+    def prefill_commit(self, req, slot, pages, n_shared=0):
+        self.prefills.append((len(req.tokens), slot, tuple(pages), n_shared))
         return 100 + req.rid
 
     def decode(self, page_tables, token, pos, temps, topks):

@@ -13,7 +13,6 @@ via exp(-ΔCE) perplexity ratio) feeds Eq. (1) in bench_throughput.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as C
-from repro.models import attention as attn_mod, layers
+from repro.models import layers
 
 
 def _time(fn, *args, iters=20) -> float:

@@ -1,38 +1,51 @@
-"""Serving benchmark: continuous batching + paged KV vs. the static batch.
+"""Serving benchmark: chunked token-budget serving vs. one-shot prefill
+vs. the static batch.
 
 The paper's 5.1 tok/s (§III) is a single-stream number; a serving system
-cares about *sustained* throughput under concurrent traffic. This bench
-replays the same Poisson-arrival workload (mixed prompt lengths, mixed
-token budgets) through both execution models:
+cares about *sustained* throughput and time-to-first-token under
+concurrent traffic. This bench replays Poisson-arrival workloads (mixed
+prompt lengths, mixed token budgets) through three execution models:
 
   * **static batching** — requests are grouped in arrival order into
     fixed batches of ``num_slots``; each batch left-pads prompts to a
     common length and decodes until the *longest* budget in the batch is
     met (the classic convoy effect: short requests ride along as padding).
-  * **continuous batching** — `GenerationEngine.submit()/step()`:
-    per-request admission into slots of one fixed-shape decode batch,
-    EOS/budget eviction with immediate backfill from the queue, KV held
-    in the shared page pool.
+  * **one-shot continuous batching** — per-request admission runs a full
+    dense prefill (jit per prompt length) fused with page commit and
+    first-token sampling, then fixed-shape decode. The PR-2 baseline
+    (``chunked_prefill=False``).
+  * **chunked (token-budget) serving** — every step is ONE fixed-shape
+    ``num_slots × prefill_chunk`` dispatch packing prefill chunks and
+    decode tokens from mixed requests; exactly one compiled step
+    function; aliased shared-prefix pages are read, never recomputed.
 
 Reported: sustained tok/s (useful tokens / wall), per-request latency
-p50/p95 (finish − arrival), decode-step counts, and the speedup. Also
-verifies that greedy continuous-batching streams are token-identical to
+p50/p95 (finish − arrival), **TTFT p50/p95** (first stream token −
+arrival), decode-step counts, and **prefill-FLOPs-saved** accounting
+(prompt tokens never run through the model thanks to prefix aliasing).
+Also verifies that greedy chunked streams are token-identical to
 per-request `generate()` — throughput must not come at the cost of
 changed outputs.
 
-Memory-lever sections (the compression levers at serving scale):
+Scenario sections:
 
-  * **KV quantization** — KV bytes/token with bf16 vs. int8 page pools
-    (int8 codes + f32 scale strips), and the max concurrent slots a fixed
-    page-pool byte budget can hold under each regime.
-  * **prefix sharing** — 8 requests sharing a 512-token system prefix,
-    served with and without `prefix_id`: sustained tok/s, peak physical
-    pages, and a token-identity check (shared ≡ unshared under greedy).
+  * **convoy** — a mixed long-prompt/short-prompt Poisson burst: under
+    one-shot prefill a long prompt monopolizes the engine while admitted
+    (short requests' decode stalls behind the dense prefill dispatch);
+    chunked serving interleaves, fixing the convoy effect.
+  * **KV quantization** — KV bytes/token with bf16 vs. int8 page pools,
+    and the max concurrent slots a fixed page-pool byte budget holds.
+  * **prefix sharing** — requests over one shared system prefix, served
+    chunked vs. one-shot: with chunked prefill the aliased pages save
+    *prefill FLOPs* (followers skip the whole prefix), not just memory —
+    TTFT collapses accordingly.
 
 Runs end-to-end on CPU at smoke scale (pure JAX path; no TPU kernels).
+``--smoke`` runs a reduced version as the tier-1 end-to-end gate.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -46,6 +59,7 @@ NUM_REQUESTS = 16
 NUM_SLOTS = 4
 PAGE_SIZE = 8
 MAX_SEQ = 160
+PREFILL_CHUNK = 16
 ARRIVAL_RATE = 200.0       # req/s — burst load: offered load > capacity,
                            # so throughput measures the engine, not arrivals
 PROMPT_LENS = (6, 10, 14, 18)
@@ -54,21 +68,26 @@ PROMPT_LENS = (6, 10, 14, 18)
 TOKEN_BUDGETS = (72, 6, 8, 6, 64, 12, 8, 6, 48, 8, 6, 12, 36, 6, 8, 12)
 
 
-def make_workload(cfg, seed=0):
+def make_workload(cfg, seed=0, num_requests=NUM_REQUESTS,
+                  prompt_lens=PROMPT_LENS, budgets=TOKEN_BUDGETS,
+                  rate=ARRIVAL_RATE):
     """(arrival_s, prompt, max_new) triples, Poisson arrivals, mixed sizes."""
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / ARRIVAL_RATE, NUM_REQUESTS))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
     reqs = []
-    for i in range(NUM_REQUESTS):
-        n = PROMPT_LENS[i % len(PROMPT_LENS)]
+    for i in range(num_requests):
+        n = prompt_lens[i % len(prompt_lens)]
         prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
-        reqs.append((float(arrivals[i]), prompt, int(TOKEN_BUDGETS[i])))
+        reqs.append((float(arrivals[i]), prompt, int(budgets[i % len(budgets)])))
     return reqs
 
 
-def _fresh_engine(m, params):
-    return GenerationEngine(m, params, max_seq=MAX_SEQ, num_slots=NUM_SLOTS,
-                            page_size=PAGE_SIZE)
+def _fresh_engine(m, params, **kw):
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("num_slots", NUM_SLOTS)
+    kw.setdefault("page_size", PAGE_SIZE)
+    kw.setdefault("prefill_chunk", PREFILL_CHUNK)
+    return GenerationEngine(m, params, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -110,29 +129,61 @@ def run_static(eng, workload):
 
 
 # ---------------------------------------------------------------------------
-# Continuous batching
+# Continuous batching (one-shot or chunked, per engine flags)
 # ---------------------------------------------------------------------------
 
-def run_continuous(eng, workload):
-    # warmup: compile prefill per prompt length + the decode step, then a
-    # full drain so the timed run starts from an empty scheduler
-    for _, prompt, _ in workload[: len(PROMPT_LENS)]:
-        eng.submit(prompt, 2)
+def run_continuous(eng, workload, prefix_id=None):
+    """Replay a workload; returns (useful, latencies, ttfts, steps, dt).
+
+    ``latencies`` are finish − arrival, ``ttfts`` first-token − arrival,
+    both in request order.
+    """
+    # warmup. Chunked path: `warmup()` precompiles the full bounded step
+    # family (context buckets × block widths). One-shot path: compile
+    # every prompt length the workload will present; with a prefix_id,
+    # also run the first two real prompts back to back — they share
+    # exactly the workload's prefix, so the aliased-commit variant
+    # (static start_page = shared pages) compiles before the timed run.
+    eng.warmup()
+    if not eng._scheduler.chunked:
+        seen = set()
+        for _, prompt, _ in workload:
+            if len(prompt) not in seen:
+                seen.add(len(prompt))
+                eng.submit(prompt, 2, prefix_id=prefix_id)
+        if prefix_id is not None and len(workload) > 1:
+            # the leader registers its prefix synchronously at admission,
+            # so a follower queued behind it matches the real page count
+            eng.submit(workload[1][1], 2, prefix_id=prefix_id)
     eng.drain()
-    pending = sorted(workload, key=lambda r: r[0])
+    sched = eng._scheduler
+    sched.stats = type(sched.stats)()   # timed run reports clean stats
+    pending = sorted(enumerate(workload), key=lambda r: r[1][0])
     finish: dict[int, float] = {}
+    first: dict[int, float] = {}
+    last_tok: dict[int, float] = {}
+    itl_max: dict[int, float] = {}     # worst inter-token gap (decode stall)
     arrival_of: dict[int, float] = {}
     t0 = time.perf_counter()
     i = 0
     while True:
         now = time.perf_counter() - t0
-        while i < len(pending) and pending[i][0] <= now:
-            arrival, prompt, mn = pending[i]
-            rid = eng.submit(prompt, mn)
+        while i < len(pending) and pending[i][1][0] <= now:
+            _, (arrival, prompt, mn) = pending[i]
+            rid = eng.submit(prompt, mn, prefix_id=prefix_id)
             arrival_of[rid] = arrival
             i += 1
-        eng.step()
+        events = eng.step()
         now = time.perf_counter() - t0
+        for rid, _tok in events:
+            if rid not in arrival_of:
+                continue
+            if rid not in first:
+                first[rid] = now
+            else:
+                itl_max[rid] = max(itl_max.get(rid, 0.0),
+                                   now - last_tok[rid])
+            last_tok[rid] = now
         for rid in eng.collect():
             finish[rid] = now
         if len(finish) == len(workload):
@@ -140,9 +191,76 @@ def run_continuous(eng, workload):
         if i < len(pending) and eng.idle:
             time.sleep(0.0005)
     dt = time.perf_counter() - t0
-    latencies = [finish[r] - arrival_of[r] for r in finish]
     useful = sum(mn for _, _, mn in workload)
-    return useful, latencies, eng.scheduler_stats.decode_steps, dt
+    return {"useful": useful,
+            "latencies": [finish[r] - arrival_of[r] for r in sorted(finish)],
+            "ttfts": [first[r] - arrival_of[r] for r in sorted(first)],
+            "itl_max": [itl_max.get(r, 0.0) for r in sorted(finish)],
+            "steps": eng.scheduler_stats.decode_steps, "dt": dt}
+
+
+# ---------------------------------------------------------------------------
+# Convoy scenario: mixed long-prompt/short-prompt Poisson burst
+# ---------------------------------------------------------------------------
+
+CONVOY_LONG = 1024
+CONVOY_SHORT = 6
+CONVOY_MAX_SEQ = 1088
+
+
+def make_convoy_workload(cfg, seed=2, num_requests=12, long_every=3,
+                         rate=300.0):
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
+    reqs = []
+    for i in range(num_requests):
+        if i % long_every == 0:
+            n, mn = CONVOY_LONG, 6
+        else:
+            n, mn = CONVOY_SHORT, 24
+        prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        reqs.append((float(arrivals[i]), prompt, mn))
+    return reqs
+
+
+def run_convoy(m, params, csv_rows, num_requests=12):
+    """Mixed long/short Poisson burst. Under one-shot prefill every
+    long-prompt admission is a monolithic dense-prefill dispatch the
+    whole engine waits on: short requests queued behind it pay its full
+    prefill in TTFT, and in-flight decodes stall (completion latency).
+    Chunked serving interleaves, so short-request latency decouples from
+    long prompts."""
+    wl = make_convoy_workload(m.cfg, num_requests=num_requests)
+    res = {}
+    for tag, kw in (("chunked", {"prefill_chunk": 64}),
+                    ("oneshot", {"chunked_prefill": False})):
+        eng = _fresh_engine(m, params, max_seq=CONVOY_MAX_SEQ, **kw)
+        r = run_continuous(eng, wl)
+        is_short = [len(p) == CONVOY_SHORT for _, p, _ in wl]
+        short_ttft = [t for t, s in zip(r["ttfts"], is_short) if s]
+        short_stall = [t for t, s in zip(r["itl_max"], is_short) if s]
+        res[tag] = {"tps": r["useful"] / r["dt"],
+                    "ttft_p95": float(np.percentile(r["ttfts"], 95)),
+                    "short_ttft_p95": float(np.percentile(short_ttft, 95)),
+                    "short_stall_max": float(np.max(short_stall)),
+                    "p95": float(np.percentile(r["latencies"], 95))}
+    csv_rows.extend([
+        ("serving/convoy_tps_chunked", f"{res['chunked']['tps']:.1f}",
+         f"{num_requests} reqs, {CONVOY_LONG}/{CONVOY_SHORT}-token prompts"),
+        ("serving/convoy_tps_oneshot", f"{res['oneshot']['tps']:.1f}", ""),
+        ("serving/convoy_short_ttft_p95_chunked_s",
+         f"{res['chunked']['short_ttft_p95']:.3f}",
+         "short requests queued behind long prefills"),
+        ("serving/convoy_short_ttft_p95_oneshot_s",
+         f"{res['oneshot']['short_ttft_p95']:.3f}", ""),
+        ("serving/convoy_decode_stall_chunked_s",
+         f"{res['chunked']['short_stall_max']:.3f}",
+         "worst inter-token gap of a short request (the convoy effect)"),
+        ("serving/convoy_decode_stall_oneshot_s",
+         f"{res['oneshot']['short_stall_max']:.3f}",
+         "decode waits out the whole monolithic long prefill"),
+    ])
+    return {"convoy": res}
 
 
 # ---------------------------------------------------------------------------
@@ -159,9 +277,7 @@ BUDGET_CONTEXT = 512
 def run_kv_quant(m, params, csv_rows):
     bpt = {}
     for quant in ("none", "int8"):
-        eng = GenerationEngine(m, params, max_seq=MAX_SEQ,
-                               num_slots=NUM_SLOTS, page_size=PAGE_SIZE,
-                               kv_quant=quant)
+        eng = _fresh_engine(m, params, kv_quant=quant)
         bpt[quant] = eng.paged_kv_bytes_per_token()
     reduction = 1.0 - bpt["int8"] / bpt["none"]
     pages_per_req = -(-BUDGET_CONTEXT // PAGE_SIZE)
@@ -184,7 +300,7 @@ def run_kv_quant(m, params, csv_rows):
 
 
 # ---------------------------------------------------------------------------
-# Prefix sharing: 8 requests over one 512-token system prefix
+# Prefix sharing: a burst over one shared system prefix, chunked vs one-shot
 # ---------------------------------------------------------------------------
 
 PREFIX_LEN = 512
@@ -193,83 +309,110 @@ PREFIX_TAIL = 16
 PREFIX_NEW_TOKENS = 32
 
 
-def _prefix_workload(cfg, seed=4):
+def _prefix_workload(cfg, seed=4, prefix_len=PREFIX_LEN,
+                     num_requests=PREFIX_REQUESTS, tail=PREFIX_TAIL,
+                     new_tokens=PREFIX_NEW_TOKENS, rate=400.0):
     rng = np.random.default_rng(seed)
-    prefix = rng.integers(0, cfg.vocab_size, (PREFIX_LEN,)).astype(np.int32)
-    return [np.concatenate([prefix,
-                            rng.integers(0, cfg.vocab_size, (PREFIX_TAIL,)
-                                         ).astype(np.int32)])
-            for _ in range(PREFIX_REQUESTS)]
+    prefix = rng.integers(0, cfg.vocab_size, (prefix_len,)).astype(np.int32)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
+    return [(float(arrivals[i]),
+             np.concatenate([prefix,
+                             rng.integers(0, cfg.vocab_size, (tail,)
+                                          ).astype(np.int32)]),
+             new_tokens)
+            for i in range(num_requests)]
 
 
-def run_prefix_sharing(m, params, csv_rows):
-    prompts = _prefix_workload(m.cfg)
-    max_seq = PREFIX_LEN + PREFIX_TAIL + PREFIX_NEW_TOKENS + PAGE_SIZE
+def run_prefix_sharing(m, params, csv_rows, prefix_len=PREFIX_LEN,
+                       num_requests=PREFIX_REQUESTS,
+                       new_tokens=PREFIX_NEW_TOKENS):
+    wl = _prefix_workload(m.cfg, prefix_len=prefix_len,
+                          num_requests=num_requests, new_tokens=new_tokens)
+    max_seq = prefix_len + PREFIX_TAIL + new_tokens + PAGE_SIZE
     max_seq += -max_seq % PAGE_SIZE
+    total_prompt = sum(len(p) for _, p, _ in wl)
 
-    def serve(prefix_id):
-        eng = GenerationEngine(m, params, max_seq=max_seq,
-                               num_slots=PREFIX_REQUESTS,
-                               page_size=PAGE_SIZE)
-        # warmup: compile the decode step plus both prefill variants the
-        # timed run will hit (first request commits all pages, followers
-        # skip the aliased prefix); the warmup requests drain fully, so
-        # their pages — and the prefix index entries — are all released
-        eng.submit(prompts[0], 2, prefix_id=prefix_id)
-        eng.submit(prompts[1], 2, prefix_id=prefix_id)
-        eng.drain()
-        t0 = time.perf_counter()
-        rids = [eng.submit(p, PREFIX_NEW_TOKENS, prefix_id=prefix_id)
-                for p in prompts]
-        peak_pages = 0
-        while not eng.idle:
-            eng.step()
-            peak_pages = max(peak_pages, eng._scheduler.pager.pages_in_use)
-        dt = time.perf_counter() - t0
-        out = eng.collect()
-        toks = sum(len(out[r]) for r in rids)
-        return ([list(out[r]) for r in rids], toks / dt, peak_pages,
-                eng.scheduler_stats.prefix_shared_pages)
+    def serve(prefix_id, **kw):
+        eng = _fresh_engine(m, params, max_seq=max_seq,
+                            num_slots=num_requests, **kw)
+        r = run_continuous(eng, wl, prefix_id=prefix_id)
+        st = eng.scheduler_stats
+        return {"tps": r["useful"] / r["dt"],
+                "ttft_p95": float(np.percentile(r["ttfts"], 95)),
+                "prefill_tokens": st.prefill_tokens,
+                "skipped": st.prefill_tokens_skipped,
+                "aliased_pages": st.prefix_shared_pages}
 
-    shared_streams, shared_tps, shared_peak, aliased = serve("sys")
-    plain_streams, plain_tps, plain_peak, _ = serve(None)
-    identical = shared_streams == plain_streams
+    shared_c = serve("sys")                         # chunked + prefix-aware
+    shared_o = serve("sys", chunked_prefill=False)  # one-shot: memory only
+    plain_c = serve(None)                           # chunked, no sharing
+    flops_saved = shared_c["skipped"] / max(total_prompt, 1)
     csv_rows.extend([
-        ("serving/prefix_shared_tps", f"{shared_tps:.1f}",
-         f"{PREFIX_REQUESTS} reqs × {PREFIX_LEN}-token shared prefix"),
-        ("serving/prefix_unshared_tps", f"{plain_tps:.1f}", ""),
-        ("serving/prefix_peak_pages_shared", str(shared_peak),
-         f"{aliased} page-aliases avoided allocation"),
-        ("serving/prefix_peak_pages_unshared", str(plain_peak), ""),
-        ("serving/prefix_token_identity", str(identical),
-         "greedy shared ≡ unshared streams"),
+        ("serving/prefix_shared_tps_chunked", f"{shared_c['tps']:.1f}",
+         f"{num_requests} reqs × {prefix_len}-token shared prefix"),
+        ("serving/prefix_shared_tps_oneshot", f"{shared_o['tps']:.1f}",
+         "sharing saves memory but not FLOPs here"),
+        ("serving/prefix_unshared_tps_chunked", f"{plain_c['tps']:.1f}", ""),
+        ("serving/prefix_prefill_tokens_skipped", str(shared_c["skipped"]),
+         f"{shared_c['aliased_pages']} aliased pages never recomputed"),
+        ("serving/prefix_prefill_flops_saved", f"{flops_saved:.1%}",
+         "prompt tokens skipped / total prompt tokens"),
+        ("serving/prefix_ttft_p95_chunked_s", f"{shared_c['ttft_p95']:.3f}",
+         "followers skip the whole prefix"),
+        ("serving/prefix_ttft_p95_oneshot_s", f"{shared_o['ttft_p95']:.3f}",
+         "followers re-run the full dense prefill"),
     ])
-    return {"prefix_shared_tps": shared_tps, "prefix_unshared_tps": plain_tps,
-            "prefix_peak_pages": (shared_peak, plain_peak),
-            "prefix_token_identical": identical}
+    return {"prefix_chunked": shared_c, "prefix_oneshot": shared_o,
+            "prefix_unshared": plain_c, "prefix_flops_saved": flops_saved}
 
 
 def verify_token_identity(m, params, workload):
-    """Greedy continuous streams ≡ per-request generate()."""
+    """Greedy chunked streams ≡ one-shot streams ≡ per-request generate()."""
     import jax.numpy as jnp
     eng = _fresh_engine(m, params)
+    eng_one = _fresh_engine(m, params, chunked_prefill=False)
     rids = [eng.submit(p, mn) for _, p, mn in workload]
-    out = eng.drain()
-    for rid, (_, p, mn) in zip(rids, workload):
+    rids_one = [eng_one.submit(p, mn) for _, p, mn in workload]
+    out, out_one = eng.drain(), eng_one.drain()
+    for rid, rid_one, (_, p, mn) in zip(rids, rids_one, workload):
+        np.testing.assert_array_equal(out[rid], out_one[rid_one])
         ref = eng.generate({"tokens": jnp.asarray(p)[None, :]}, mn)[0]
         np.testing.assert_array_equal(out[rid], ref[: len(out[rid])])
     return True
 
 
-def run(csv_rows: list) -> dict:
+def run(csv_rows: list, smoke: bool = False) -> dict:
     cfg = C.get_smoke_config("qwen25-05b")
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
-    workload = make_workload(cfg)
 
+    if smoke:
+        # tier-1 end-to-end gate: small burst through the chunked engine,
+        # identity vs one-shot + generate(), prefix-FLOP accounting
+        workload = make_workload(cfg, num_requests=6,
+                                 budgets=(24, 6, 8, 6, 12, 8))
+        identical = verify_token_identity(m, params, workload[:3])
+        r = run_continuous(_fresh_engine(m, params), workload)
+        kv = run_kv_quant(m, params, csv_rows)
+        prefix = run_prefix_sharing(m, params, csv_rows, prefix_len=32,
+                                    num_requests=3, new_tokens=8)
+        csv_rows.extend([
+            ("serving/smoke_sustained_tps", f"{r['useful'] / r['dt']:.1f}",
+             f"{r['useful']} tokens, {r['steps']} unified dispatches"),
+            ("serving/smoke_ttft_p95_s",
+             f"{np.percentile(r['ttfts'], 95):.3f}", ""),
+            ("serving/smoke_token_identity", str(identical),
+             "chunked ≡ one-shot ≡ generate()"),
+        ])
+        return {"token_identical": identical, **kv, **prefix}
+
+    workload = make_workload(cfg)
     su, sl, ss, sdt = run_static(_fresh_engine(m, params), workload)
-    cu, cl, cs, cdt = run_continuous(_fresh_engine(m, params), workload)
+    r = run_continuous(_fresh_engine(m, params), workload)
+    cu, cl, ct, cs, cdt = (r["useful"], r["latencies"], r["ttfts"],
+                           r["steps"], r["dt"])
     identical = verify_token_identity(m, params, workload)
+    convoy = run_convoy(m, params, csv_rows)
     kv = run_kv_quant(m, params, csv_rows)
     prefix = run_prefix_sharing(m, params, csv_rows)
 
@@ -278,7 +421,7 @@ def run(csv_rows: list) -> dict:
         ("serving/static_sustained_tps", f"{s_tps:.1f}",
          f"{su} tokens, {ss} decode steps"),
         ("serving/continuous_sustained_tps", f"{c_tps:.1f}",
-         f"{cu} tokens, {cs} decode steps"),
+         f"{cu} tokens, {cs} unified dispatches"),
         ("serving/continuous_speedup", f"{c_tps / s_tps:.2f}x",
          "sustained tok/s vs static batch"),
         ("serving/static_p50_latency_s", f"{np.percentile(sl, 50):.3f}", ""),
@@ -287,22 +430,41 @@ def run(csv_rows: list) -> dict:
          f"{np.percentile(cl, 50):.3f}", ""),
         ("serving/continuous_p95_latency_s",
          f"{np.percentile(cl, 95):.3f}", ""),
+        ("serving/continuous_ttft_p50_s", f"{np.percentile(ct, 50):.3f}", ""),
+        ("serving/continuous_ttft_p95_s", f"{np.percentile(ct, 95):.3f}", ""),
         ("serving/greedy_token_identity", str(identical),
-         "continuous ≡ sequential generate()"),
+         "chunked ≡ one-shot ≡ sequential generate()"),
     ]
     csv_rows.extend(rows)
     return {"static_tps": s_tps, "continuous_tps": c_tps,
             "speedup": c_tps / s_tps,
             "static_p95": float(np.percentile(sl, 95)),
             "continuous_p95": float(np.percentile(cl, 95)),
-            "token_identical": identical, **kv, **prefix}
+            "ttft_p95": float(np.percentile(ct, 95)),
+            "token_identical": identical, **convoy, **kv, **prefix}
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run for the tier-1 gate")
+    args = ap.parse_args()
     rows: list = []
-    out = run(rows)
+    out = run(rows, smoke=args.smoke)
     for r in rows:
         print(",".join(str(x) for x in r))
     assert out["token_identical"]
-    assert out["prefix_token_identical"]
     assert out["kv_bytes_reduction"] >= 0.40
+    # prefix-aware chunked prefill must actually skip the aliased pages
+    assert out["prefix_chunked"]["skipped"] > 0
+    assert out["prefix_chunked"]["prefill_tokens"] \
+        < out["prefix_unshared"]["prefill_tokens"]
+    if not args.smoke:
+        # the headline claims: sharing saves FLOPs (not just memory),
+        # TTFT p95 beats the one-shot baseline on the shared-prefix
+        # burst, and chunking bounds the convoy-effect decode stall
+        assert out["prefix_flops_saved"] > 0.5
+        assert out["prefix_chunked"]["ttft_p95"] \
+            < out["prefix_oneshot"]["ttft_p95"]
+        assert out["convoy"]["chunked"]["short_stall_max"] \
+            < out["convoy"]["oneshot"]["short_stall_max"]

@@ -1,18 +1,24 @@
-"""Continuous-batching serving demo: submit / step / collect streaming.
+"""Continuous-batching serving demo: chunked prefill + streaming.
 
-A tiny qwen2.5-style model serves a burst of mixed-size requests through
-the paged-KV continuous-batching engine:
+A tiny qwen2.5-style model serves a mixed burst — one LONG prompt next
+to several short chats — through the token-budget chunked serving path:
 
-  * requests are submitted with their own token budgets and sampling
-    params (greedy and temperature rows share one decode batch),
+  * every step is ONE fixed-shape dispatch packing prefill chunks and
+    decode tokens from mixed requests: the long prompt's chunks
+    interleave with everyone else's decode tokens instead of stalling
+    them (the convoy-effect fix), and its first token is sampled by the
+    dispatch that commits its last chunk,
   * `step()` returns `(request_id, token)` stream events as they are
     produced — this is the hook a real frontend would forward to clients,
   * finished requests are evicted mid-flight and their KV pages + batch
     slot immediately reused by queued work,
   * the engine holds KV in **int8 pages** (``kv_quant="int8"``: quantized
-    on commit, dequantized inside the paged attention read), and requests
-    sharing a system prompt pass ``prefix_id`` so their common full pages
-    are aliased instead of recomputed — see docs/SERVING.md.
+    per chunk on commit, dequantized inside the paged attention read),
+    and requests sharing a system prompt pass ``prefix_id`` so their
+    common full pages are aliased — under chunked prefill those tokens
+    are **never recomputed** (prefix sharing saves prefill FLOPs, not
+    just memory). `pin_prefix` keeps the hot prefix resident for the
+    next burst — see docs/SERVING.md.
 
 Run:  PYTHONPATH=src python examples/serve_continuous.py
 """
@@ -29,17 +35,20 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    eng = GenerationEngine(model, params, max_seq=64,
+    eng = GenerationEngine(model, params, max_seq=128,
                            num_slots=4, page_size=8,
-                           kv_quant="int8")      # int8 KV pages + scale strips
+                           prefill_chunk=8,       # token budget 4×8 per step
+                           kv_quant="int8")       # int8 KV pages + scales
 
     rng = np.random.default_rng(0)
     # a shared 16-token "system prompt": requests passing the same
-    # prefix_id alias its full KV pages instead of re-committing them
+    # prefix_id alias its full KV pages AND skip recomputing them
     system = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    eng.pin_prefix("system")   # keep it resident across bursts
     specs = [  # (tail_len, max_new_tokens, temperature, share_prefix)
-        (5, 12, 0.0, True), (11, 4, 0.0, False), (8, 20, 0.8, True),
-        (16, 6, 0.0, False), (7, 9, 0.0, True), (13, 16, 1.2, False),
+        (5, 12, 0.0, True), (11, 4, 0.0, False),
+        (64, 6, 0.0, False),                       # the LONG prompt
+        (8, 20, 0.8, True), (7, 9, 0.0, True), (13, 16, 1.2, False),
         (4, 5, 0.0, True), (9, 8, 0.0, False),
     ]
     rid_meta = {}
@@ -54,7 +63,7 @@ def main():
               f"budget={max_new}  T={temp}"
               f"{'  [shared prefix]' if share else ''}")
 
-    print("\n--- streaming ---")
+    print("\n--- streaming (chunks interleave with decode) ---")
     streams: dict[int, list[int]] = {rid: [] for rid in rid_meta}
     step = 0
     while not eng.idle:
@@ -62,8 +71,11 @@ def main():
         step += 1
         for rid, tok in events:
             streams[rid].append(tok)
+        sched = eng._scheduler
+        prefilling = sum(st.prefilling for st in sched.slots.values())
         line = " ".join(f"r{rid}:{tok}" for rid, tok in events)
-        print(f"step {step:2d}  [{eng.num_active} active]  {line}")
+        print(f"step {step:2d}  [{eng.num_active} active, "
+              f"{prefilling} prefilling]  {line}")
 
     print("\n--- finished ---")
     for rid, toks in eng.collect().items():
@@ -73,8 +85,12 @@ def main():
 
     st = eng.scheduler_stats
     util = st.slot_tokens / max(st.slot_steps, 1)
-    print(f"\n{st.decode_steps} decode dispatches for {st.finished} "
+    print(f"\n{st.decode_steps} unified dispatches for {st.finished} "
           f"requests; slot utilization {util:.0%}")
+    print(f"prefill: {st.prefill_tokens} prompt tokens in "
+          f"{st.prefill_chunks} chunks, {st.prefill_tokens_skipped} "
+          f"aliased tokens never recomputed")
+    eng.unpin_prefix("system")
 
 
 if __name__ == "__main__":

@@ -4,11 +4,15 @@
 #
 #   scripts/run_tier1.sh [results_dir]
 #
-# Runs every tests/test_*.py in its own pytest process under a timeout (one
-# hanging file must not sink the whole gate), writes per-file JUnit XML into
-# results_dir (default results/tier1), then prints a summary line
+# Gates, in order: docs-link checker, ruff lint (skipped with a notice if
+# ruff is not installed), the serving benchmark's --smoke mode (chunked
+# serving exercised end-to-end), then every tests/test_*.py in its own
+# pytest process under a timeout (one hanging file must not sink the whole
+# gate), writing per-file JUnit XML into results_dir (default
+# results/tier1) and printing a summary line
 #
-#   TIER1 files=<n> passed=<p> failed=<f> errors=<e> skipped=<s> timeout=<t>
+#   TIER1 files=<n> passed=<p> failed=<f> errors=<e> skipped=<s> \
+#       timeout=<t> doclinks=<d> lint=<l> bench=<b>
 #
 # and exits non-zero if failures+errors+timeouts exceed the baseline in
 # scripts/tier1_baseline.txt (tracked in git — update it deliberately when
@@ -61,6 +65,37 @@ sys.exit(1 if errors else 0)
 PY
 link_rc=$?
 
+# --- lint gate: ruff (config in pyproject.toml — conservative rule set:
+# syntax errors, undefined names, unused imports). The container may not
+# ship ruff; skip with a notice rather than failing on a missing tool.
+lint_rc=0
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks examples scripts
+    lint_rc=$?
+    echo "LINT: ruff check rc=$lint_rc"
+elif python -c "import ruff" >/dev/null 2>&1; then
+    python -m ruff check src tests benchmarks examples scripts
+    lint_rc=$?
+    echo "LINT: ruff check rc=$lint_rc"
+else
+    echo "LINT: ruff not installed — skipped"
+fi
+
+# --- serving smoke gate: exercise the chunked serving path end-to-end
+# (engine + scheduler + pager + kernels fallback) through the benchmark's
+# reduced mode; asserts token identity and prefix-FLOP accounting
+bench_rc=0
+if timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+        python benchmarks/bench_serving.py --smoke \
+        >"$RESULTS_DIR/bench_serving_smoke.log" 2>&1; then
+    echo "BENCH-SMOKE: ok ($(grep -c '^serving/' \
+        "$RESULTS_DIR/bench_serving_smoke.log") metrics)"
+else
+    bench_rc=1
+    echo "BENCH-SMOKE: FAILED (see $RESULTS_DIR/bench_serving_smoke.log)"
+    tail -5 "$RESULTS_DIR/bench_serving_smoke.log"
+fi
+
 timeouts=0
 for f in tests/test_*.py; do
     name=$(basename "$f" .py)
@@ -73,7 +108,8 @@ for f in tests/test_*.py; do
     fi
 done
 
-python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" "$link_rc" <<'PY'
+python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" "$link_rc" \
+    "$lint_rc" "$bench_rc" <<'PY'
 import glob
 import os
 import sys
@@ -82,6 +118,8 @@ import xml.etree.ElementTree as ET
 results_dir, timeouts, baseline_path = (sys.argv[1], int(sys.argv[2]),
                                         sys.argv[3])
 link_errors = int(sys.argv[4])
+lint_errors = 1 if int(sys.argv[5]) else 0
+bench_errors = 1 if int(sys.argv[6]) else 0
 tests = passed = failed = errors = skipped = files = 0
 for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     files += 1
@@ -97,10 +135,10 @@ for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     errors += e
     skipped += s
     passed += t - f - e - s
-red = failed + errors + timeouts + link_errors
+red = failed + errors + timeouts + link_errors + lint_errors + bench_errors
 print(f"TIER1 files={files} passed={passed} failed={failed} "
       f"errors={errors} skipped={skipped} timeout={timeouts} "
-      f"doclinks={link_errors}")
+      f"doclinks={link_errors} lint={lint_errors} bench={bench_errors}")
 
 if not os.path.exists(baseline_path):
     with open(baseline_path, "w") as fh:

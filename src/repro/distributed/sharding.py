@@ -24,8 +24,6 @@ quant groups: K/8 and K/GS divide evenly whenever K does).
 from __future__ import annotations
 
 import contextlib
-import math
-import re
 from typing import Any
 
 import jax

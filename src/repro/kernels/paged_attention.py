@@ -1,27 +1,39 @@
-"""Pallas TPU fused dequant + paged-attention decode kernel.
+"""Pallas TPU fused dequant + paged-attention kernel (decode + chunked
+prefill).
 
-Why it exists: with int8 KV pages (§Perf A4 at serving scale) the decode
+Why it exists: with int8 KV pages (§Perf A4 at serving scale) the serving
 hot loop is bandwidth-bound on the page pool. The pure-jnp path in
-`models.attention.attention_decode_paged` gathers the slot's pages into a
-logical ``[B, S_slot, Hkv, hd]`` view, dequantizes it, then attends —
-XLA materializes the gathered + dequantized (bf16) copy in HBM, paying
-~2.5× the pool's int8 byte traffic. This kernel reads the int8 codes and
-their float32 scale strips page-by-page straight out of the pool (the
-page table rides in scalar-prefetch memory and drives the BlockSpec
-index maps — vLLM-TPU style), dequantizes in VMEM, and carries online
-softmax state across the page grid axis, so nothing but the final
-``[B, H, hd]`` output ever leaves VMEM in float.
+`models.attention` gathers the slot's pages into a logical
+``[B, S_slot, Hkv, hd]`` view, dequantizes it, then attends — XLA
+materializes the gathered + dequantized (bf16) copy in HBM, paying ~2.5×
+the pool's int8 byte traffic. This kernel reads the int8 codes and their
+float32 scale strips page-by-page straight out of the pool (the page
+table rides in scalar-prefetch memory and drives the BlockSpec index
+maps — vLLM-TPU style), dequantizes in VMEM, and carries online softmax
+state across the page grid axis, so nothing but the final output ever
+leaves VMEM in float.
 
-Layout: q ``[B, Hkv, G, hd]`` (head = kv_head·G + group, matching the
-reshape in `attention_decode_paged`), pools ``[N, P, Hkv, hd]`` int8 with
-scales ``[N, P, Hkv]`` f32, page_table ``[B, pages_per_slot]`` int32,
-pos ``[B]`` int32 (last valid absolute position, inclusive). Grid
-``(B, Hkv, pages_per_slot)``, pages innermost (accumulation axis).
+Two entry points over one kernel body:
 
-Off-TPU the wrapper drops to `kernels.ref.paged_attention_ref`
+  * `paged_attention_chunk` — **multi-query blocks** (chunked prefill):
+    ``C`` queries per batch row share one page-table row and are masked
+    causally against *per-token* absolute positions, so one page read is
+    amortized over the whole chunk — the compute-density win that makes
+    hybrid prefill+decode steps pay for themselves.
+  * `paged_attention` — the single-token decode form (``C = 1``), kept as
+    the stable API for the decode hot path and the kernel test suite.
+
+Layout: q ``[B, C, Hkv, G, hd]`` (head = kv_head·G + group), pools
+``[N, P, Hkv, hd]`` int8 with scales ``[N, P, Hkv]`` f32, page_table
+``[B, pages_per_slot]`` int32, pos ``[B, C]`` int32 (inclusive last valid
+absolute position per query; ``-1`` = padding query, fully masked). Grid
+``(B, Hkv, pages_per_slot)``, pages innermost (accumulation axis); the
+C·G query rows of a (batch, kv-head) cell ride the MXU together.
+
+Off-TPU the wrappers drop to `kernels.ref.paged_attention_chunk_ref`
 (numerically equal up to online-softmax reassociation); interpret mode
 runs the kernel body as a CPU program for the allclose sweeps in
-tests/test_paged_attention.py.
+tests/test_paged_attention.py and tests/test_chunked_prefill.py.
 """
 from __future__ import annotations
 
@@ -45,7 +57,8 @@ def supported() -> bool:
 def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
                        q_ref, k_ref, ks_ref, v_ref, vs_ref,
                        o_ref, m_ref, l_ref, acc_ref, *,
-                       page_size: int, n_blocks: int, scale: float):
+                       page_size: int, n_blocks: int, n_chunk: int,
+                       n_groups: int, scale: float):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -55,7 +68,7 @@ def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                    # [G, hd]
+    q = q_ref[0, 0].astype(jnp.float32)                    # [gp, hd]
     # fused dequant: int8 codes × per-(position, head) scale strip, VMEM-only
     k = k_ref[0][:, 0].astype(jnp.float32) \
         * ks_ref[0][:, :1].astype(jnp.float32)             # [P, hd]
@@ -64,16 +77,31 @@ def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
+    # per-row query position: row r of the q block is chunk token r // G.
+    # pos lives in SMEM (scalar prefetch); a vector gather out of SMEM is
+    # not expressible, so select it with a static unroll over the (small,
+    # compile-time) chunk length — padded rows keep -1 and mask everything.
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s.shape[0], 1), 0) \
+        // n_groups                                        # [gp, 1] chunk idx
+    q_pos = jnp.full((s.shape[0], 1), -1, jnp.int32)
+    for cc in range(n_chunk):
+        q_pos = jnp.where(rows == cc, pos_ref[b * n_chunk + cc], q_pos)
     k_pos = j * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, s.shape, 1)                             # [G, P]
-    s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
+        jnp.int32, s.shape, 1)                             # [gp, P]
+    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
 
-    m_prev = m_ref[...]                                    # [G, 128] replicated
+    m_prev = m_ref[...]                                    # [gp, 128] replicated
     l_prev = l_ref[...]
-    m_cur = jnp.max(s, axis=1)[:, None]                    # [G, 1]
+    m_cur = jnp.max(s, axis=1)[:, None]                    # [gp, 1]
     m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
     alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, :1])                          # [G, P]
+    # masked entries must contribute exactly 0: for a fully masked row
+    # (padding query, q_pos = -1) m_new is still NEG_INF, so the plain
+    # exp(s - m) would be exp(0) = 1 per key and the row would silently
+    # average v. Valid rows are unchanged (exp(NEG_INF - m) underflows
+    # to 0 anyway); fully masked rows keep l = 0 and flush to 0.
+    p = jnp.where(s > NEG_INF * 0.5,
+                  jnp.exp(s - m_new[:, :1]), 0.0)          # [gp, P]
     l_new = l_prev * alpha + jnp.broadcast_to(
         jnp.sum(p, axis=1)[:, None], l_prev.shape)
     acc_ref[...] = acc_ref[...] * alpha[:, :1] + jax.lax.dot_general(
@@ -90,34 +118,41 @@ def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
 
 @functools.partial(jax.jit,
                    static_argnames=("scale", "interpret"))
-def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
-                    v_pool: jax.Array, vs: jax.Array,
-                    page_table: jax.Array, pos: jax.Array, *,
-                    scale: float | None = None,
-                    interpret: bool = False) -> jax.Array:
-    """Fused dequant + single-token attention over int8 KV pages.
+def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
+                          v_pool: jax.Array, vs: jax.Array,
+                          page_table: jax.Array, pos: jax.Array, *,
+                          scale: float | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """Fused dequant + multi-query causal attention over int8 KV pages.
 
-    q ``[B, Hkv, G, hd]``; k/v pools ``[N, P, Hkv, hd]`` int8; ks/vs
-    ``[N, P, Hkv]`` f32; page_table ``[B, pages_per_slot]`` int32; pos
-    ``[B]`` int32 (inclusive last valid position — the just-written
-    token). Returns ``[B, Hkv, G, hd]`` float32. Pages past the valid
-    range may map to the scratch page; their positions exceed ``pos`` and
-    are masked, so stale table entries never leak into the softmax.
+    q ``[B, C, Hkv, G, hd]`` — C queries per row (prefill chunk; decode is
+    C = 1); k/v pools ``[N, P, Hkv, hd]`` int8; ks/vs ``[N, P, Hkv]`` f32;
+    page_table ``[B, pages_per_slot]`` int32 (one row per batch row — all
+    C queries of a row read the same slot's pages); pos ``[B, C]`` int32
+    per-query inclusive positions (``-1`` ⇒ padding query, output 0).
+    Returns ``[B, C, Hkv, G, hd]`` float32. Pages past a query's valid
+    range (stale table entries, the scratch page) hold positions
+    exceeding its ``pos`` and are causally masked, so they never leak
+    into the softmax.
     """
-    b, hkv, g, hd = q.shape
-    n_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    b, c, hkv, g, hd = q.shape
+    page_size = k_pool.shape[1]
     n_blocks = page_table.shape[1]
     scale = scale if scale is not None else hd ** -0.5
-    # pad the group dim to the fp32 sublane quantum so tiny-GQA configs
-    # (G < 8) still map onto full tiles; padded rows are sliced off below
-    gp = max(8, g)
-    if gp != g:
-        q = jnp.concatenate(
-            [q, jnp.zeros((b, hkv, gp - g, hd), q.dtype)], axis=2)
+    # fold the chunk into the row axis: row r = query (r // G) group (r % G);
+    # pad rows to the fp32 sublane quantum so tiny chunks (C·G < 8) still
+    # map onto full tiles — padded rows carry pos -1 and are sliced off
+    rows = c * g
+    gp = max(8, rows)
+    qr = jnp.moveaxis(q, 1, 2).reshape(b, hkv, rows, hd)
+    if gp != rows:
+        qr = jnp.concatenate(
+            [qr, jnp.zeros((b, hkv, gp - rows, hd), qr.dtype)], axis=2)
 
     grid = (b, hkv, n_blocks)
     kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
-                               n_blocks=n_blocks, scale=scale)
+                               n_blocks=n_blocks, n_chunk=c, n_groups=g,
+                               scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -150,6 +185,25 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(page_table.reshape(-1).astype(jnp.int32), pos.astype(jnp.int32),
-      q, k_pool, ks, v_pool, vs)
-    return out[:, :, :g]
+    )(page_table.reshape(-1).astype(jnp.int32),
+      pos.reshape(-1).astype(jnp.int32),
+      qr, k_pool, ks, v_pool, vs)
+    out = out[:, :, :rows].reshape(b, hkv, c, g, hd)
+    return jnp.moveaxis(out, 2, 1)
+
+
+def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
+                    v_pool: jax.Array, vs: jax.Array,
+                    page_table: jax.Array, pos: jax.Array, *,
+                    scale: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """Single-token decode form: q ``[B, Hkv, G, hd]``, pos ``[B]``.
+
+    Thin wrapper over `paged_attention_chunk` with a chunk of one — the
+    decode hot path and the chunked-prefill path share one kernel body.
+    Returns ``[B, Hkv, G, hd]`` float32.
+    """
+    out = paged_attention_chunk(q[:, None], k_pool, ks, v_pool, vs,
+                                page_table, pos[:, None], scale=scale,
+                                interpret=interpret)
+    return out[:, 0]

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import PACK, PackedLinear, unpack_int4
+from repro.core.packing import PackedLinear, unpack_int4
 
 
 def dequant_ref(qweight: jax.Array, scales: jax.Array, zeros: jax.Array,
@@ -74,6 +74,42 @@ def paged_attention_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
     sc = jnp.where(valid[:, None, None, :], sc, -1e30)
     p = jax.nn.softmax(sc, axis=-1)
     return jnp.einsum("bkgs,bskd->bkgd", p, v)
+
+
+def paged_attention_chunk_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
+                              scale=None):
+    """Oracle for the multi-query (chunked-prefill) paged-attention kernel.
+
+    q [B, C, Hkv, G, hd] — C queries per batch row (a prefill chunk, or a
+    single decode token at C=1); k/v pools [N, P, Hkv, hd] int8 with
+    ks/vs [N, P, Hkv] f32 scale strips; page_table [B, pages_per_slot]
+    int32 (one table row per batch row — all C queries of a row belong to
+    the same request slot); pos [B, C] int32 absolute query positions,
+    ``-1`` marking padding queries (masked everywhere, output zero).
+
+    Each query attends causally over its slot's committed pages:
+    ``k_pos <= pos[b, c]``. Every position at or below a valid query's
+    position holds real committed KV (earlier chunks, aliased
+    shared-prefix pages, or this chunk's own tokens written before the
+    read), so the arange-based mask is exact.
+    """
+    b, c, hkv, g, hd = q.shape
+    page_size = k_pool.shape[1]
+    s_slot = page_table.shape[1] * page_size
+    scale = scale if scale is not None else hd ** -0.5
+    k = (k_pool.astype(jnp.float32)
+         * ks[..., None].astype(jnp.float32))[page_table]
+    v = (v_pool.astype(jnp.float32)
+         * vs[..., None].astype(jnp.float32))[page_table]
+    k = k.reshape(b, s_slot, hkv, hd)
+    v = v.reshape(b, s_slot, hkv, hd)
+    sc = jnp.einsum("bckgd,bskd->bckgs", q.astype(jnp.float32), k) * scale
+    causal = (jnp.arange(s_slot)[None, None, :]
+              <= pos[:, :, None])                          # [B, C, S]
+    sc = jnp.where(causal[:, :, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bckgs,bskd->bckgd", p, v)
+    return jnp.where((pos >= 0)[:, :, None, None, None], out, 0.0)
 
 
 def flash_attention_ref(q, k, v, *, scale=None, causal=True,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs import ShapeCell, get_config
+from repro.configs import ShapeCell
 from repro.configs.base import ModelConfig
 from repro.core.awq import AWQConfig
 from repro.core.pipeline import quantize_params

@@ -22,7 +22,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro.configs as configs
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore

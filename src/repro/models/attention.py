@@ -1,6 +1,6 @@
 """Attention: GQA/MQA/MHA, sliding-window, chunked-long-seq, decode caches.
 
-Three execution regimes:
+Execution regimes:
 
   * train/prefill — q-chunked attention (`attn_chunk` queries at a time, full
     key rows per chunk) so 32k-token prefill never materializes an S×S score
@@ -12,6 +12,9 @@ Three execution regimes:
   * decode (ring cache) — sliding-window layers keep a ``[B, W, Hkv, hd]``
     ring buffer; slot ``s`` holds absolute position ``p - ((p - s) mod W)``,
     reconstructed in closed form for masking.
+  * paged chunk (serving) — `attention_chunk_paged`: the engine's unified
+    prefill/decode step over the page pools (scatter the block's K/V, then
+    attend causally per token); single-token paged decode is its C = 1 form.
 
 Everything runs through `layers.linear`, so all four projections quantize
 through the paper's AWQ pipeline untouched.
@@ -259,52 +262,74 @@ def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
-    """Single-token decode against a paged KV pool.
+def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
+    """Token-budget chunk step against a paged KV pool — the unified
+    prefill/decode execution path.
 
-    pool leaves ``[num_pages, P, ...]``; page_table ``[B, pages_per_slot]``
-    int32 (physical page per logical block); x ``[B, D]``, pos ``[B]``.
-    Returns (y [B, D], new pool). The gathered logical view is laid out
-    exactly like the dense ``[B, S, Hkv, hd]`` cache, so paged and dense
-    decode produce bitwise-identical attention outputs (same kv regime).
+    x ``[B, C, D]`` — each batch row is one request slot's contribution to
+    this step: a prefill chunk of up to C tokens, a single decode token
+    (remaining positions padded), or nothing (all padding). pos ``[B, C]``
+    int32 absolute positions, ``-1`` marking padding tokens; page_table
+    ``[B, pages_per_slot]`` int32 (row = slot). Returns (y [B, C, D],
+    new pool).
 
-    Int8 pools quantize the new token on write (same codec as
-    quantize-on-commit) and dequantize at the point of use: on TPU via
-    the fused Pallas kernel (`kernels.paged_attention` — page table in
-    scalar-prefetch memory, dequant in VMEM), elsewhere via the jnp
-    gather below, which doubles as the kernel's reference semantics.
+    Execution order is scatter-then-gather: every valid token's K/V is
+    written into ``pool[table[b, pos // P], pos % P]`` first (padding
+    redirected to the reserved scratch page 0), then each token attends
+    causally (``k_pos <= pos``) over its slot's pages. Because a chunk's
+    own tokens are committed before the read, intra-chunk causality falls
+    out of the same mask that covers previously committed pages — decode
+    tokens, earlier chunks, and **aliased shared-prefix pages**, which are
+    therefore read, never recomputed (prefix sharing saves prefill FLOPs,
+    not just memory). Every position ≤ a valid query's pos holds real
+    committed KV, so the arange-based mask is exact; stale table entries
+    hold positions beyond pos and are causally masked.
+
+    Int8 pools quantize each token on write with the per-(position, head)
+    absmax codec — identical to one-shot quantize-on-commit, so chunked
+    and one-shot commits produce bit-identical pages — and dequantize at
+    the point of use: on TPU via the fused multi-query Pallas kernel
+    (`kernels.paged_attention.paged_attention_chunk` — page table in
+    scalar-prefetch memory, dequant in VMEM, one page read amortized over
+    the whole chunk), elsewhere via the jnp gather below, which doubles
+    as the kernel's reference semantics.
     """
-    b = x.shape[0]
-    q, k1, v1 = _project_qkv(p, x, cfg, pos, 0, name)       # [B, H(kv), hd]
+    b, c, _ = x.shape
     page_size = pool["k"].shape[1]
-    phys = jnp.take_along_axis(page_table, (pos // page_size)[:, None],
-                               axis=1)[:, 0]                # [B]
-    offset = pos % page_size
+    valid = pos >= 0
+    rope_pos = jnp.where(valid, pos, 0)
+    q, k1, v1 = _project_qkv(p, x, cfg, rope_pos, 0, name)  # [B, C, H(kv), hd]
+    phys = jnp.take_along_axis(page_table, rope_pos // page_size, axis=1)
+    phys = jnp.where(valid, phys, 0)          # padding → scratch page 0
+    offset = jnp.where(valid, rope_pos % page_size, 0)
+    fp, fo = phys.reshape(-1), offset.reshape(-1)
     quant = "ks" in pool
     new_pool = {}
     if quant:
         k1, ks1 = _kv_quantize(k1)
         v1, vs1 = _kv_quantize(v1)
-        new_pool["ks"] = pool["ks"].at[phys, offset].set(ks1)
-        new_pool["vs"] = pool["vs"].at[phys, offset].set(vs1)
-    new_pool["k"] = pool["k"].at[phys, offset].set(k1.astype(pool["k"].dtype))
-    new_pool["v"] = pool["v"].at[phys, offset].set(v1.astype(pool["v"].dtype))
+        new_pool["ks"] = pool["ks"].at[fp, fo].set(
+            ks1.reshape(b * c, cfg.num_kv_heads))
+        new_pool["vs"] = pool["vs"].at[fp, fo].set(
+            vs1.reshape(b * c, cfg.num_kv_heads))
+    kv_shape = (b * c, cfg.num_kv_heads, cfg.head_dim)
+    new_pool["k"] = pool["k"].at[fp, fo].set(
+        k1.reshape(kv_shape).astype(pool["k"].dtype))
+    new_pool["v"] = pool["v"].at[fp, fo].set(
+        v1.reshape(kv_shape).astype(pool["v"].dtype))
 
     g = cfg.num_heads // cfg.num_kv_heads
+    nm = (lambda s_: None) if name is None else name
     if quant:
         from repro.kernels import paged_attention as paged_kernel
         if paged_kernel.supported():
-            # fused Pallas path: int8 codes + scale strips dequantized in
-            # VMEM, page table in scalar-prefetch memory — the gathered
-            # float copy of the cache never touches HBM
-            qk = q.reshape(b, cfg.num_kv_heads, g, cfg.head_dim)
-            out = paged_kernel.paged_attention(
+            qk = q.reshape(b, c, cfg.num_kv_heads, g, cfg.head_dim)
+            out = paged_kernel.paged_attention_chunk(
                 qk, new_pool["k"], new_pool["ks"], new_pool["v"],
                 new_pool["vs"], page_table, pos,
                 scale=cfg.head_dim ** -0.5)
-            out = out.reshape(b, cfg.q_dim).astype(
+            out = out.reshape(b, c, cfg.q_dim).astype(
                 jnp.dtype(cfg.activation_dtype))
-            nm = (lambda s_: None) if name is None else name
             return linear(p["wo"], out, nm("wo")), new_pool
 
     # gather-based read: page table → logical [B, S_slot, Hkv, hd] view
@@ -319,15 +344,30 @@ def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
         vs = new_pool["vs"][page_table].reshape(b, s_slot, cfg.num_kv_heads)
         ck = _kv_dequant(ck, ks, adt)
         cv = _kv_dequant(cv, vs, adt)
-    k_pos = jnp.where(jnp.arange(s_slot)[None, :] <= pos[:, None],
-                      jnp.arange(s_slot)[None, :], -1)
-    qg = q.reshape(b, 1, cfg.num_kv_heads, g, cfg.head_dim)
-    out = _sdpa(qg, ck, cv, pos[:, None], k_pos, causal=False, window=0,
+    k_pos = jnp.broadcast_to(jnp.arange(s_slot)[None, :], (b, s_slot))
+    qg = q.reshape(b, c, cfg.num_kv_heads, g, cfg.head_dim)
+    out = _sdpa(qg, ck, cv, pos, k_pos, causal=True, window=0,
                 scale=cfg.head_dim ** -0.5)
-    out = out.reshape(b, cfg.q_dim)
-    nm = (lambda s_: None) if name is None else name
+    out = out.reshape(b, c, cfg.q_dim)
     y = linear(p["wo"], out, nm("wo"))
     return y, new_pool
+
+
+def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
+    """Single-token decode against a paged KV pool: the C = 1 form of
+    `attention_chunk_paged` (one implementation serves both regimes).
+
+    pool leaves ``[num_pages, P, ...]``; page_table ``[B, pages_per_slot]``
+    int32; x ``[B, D]``, pos ``[B]``. Returns (y [B, D], new pool). The
+    chunk path's causal arange mask reduces to exactly the old
+    ``k_pos <= pos`` decode mask at C = 1, so the gathered logical view
+    stays laid out like the dense ``[B, S, Hkv, hd]`` cache and paged and
+    dense decode produce bitwise-identical attention outputs (same kv
+    regime).
+    """
+    y, new_pool = attention_chunk_paged(p, pool, page_table, x[:, None],
+                                        cfg, pos=pos[:, None], name=name)
+    return y[:, 0], new_pool
 
 
 def attention_decode(p, cache, x, cfg, *, pos, window: int = 0, name=None):

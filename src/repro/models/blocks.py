@@ -5,6 +5,12 @@ moe), pre-norm residual wiring, per-kind decode caches.
   * mode="train"   — full-sequence forward, no cache.
   * mode="prefill" — full-sequence forward, returns a populated decode cache.
   * mode="decode"  — single token [B, D], consumes + returns the cache.
+  * mode="chunk"   — token-budget block [B, C, D] against the paged cache
+    (serving's unified prefill/decode step): every row is one slot's
+    prefill chunk or decode token, positions carry ``-1`` padding. Only
+    pure paged-attention blocks support it — bounded per-slot state
+    (sliding-window rings, SSM recurrences, MLA latents) is inherently
+    sequential per token and stays on the one-shot prefill path.
 
 Hymba (arXiv:2411.13676) blocks run attention and the Mamba2 SSD branch in
 parallel on the same normed input, each branch output re-normalized then
@@ -148,6 +154,20 @@ def _attn_decode(p, cache, x, cfg, kind: LayerKind, pos, page_table):
     return y, ("kv", kv)
 
 
+def _mixer_chunk(p, cache, x, cfg, kind: LayerKind, pos, name, page_table):
+    """Chunked (multi-token) mixer step — full paged attention only."""
+    if kind.mixer != "attn" or "kv_pool" not in cache:
+        raise ValueError(
+            f"chunked execution needs a pure paged-attention cache; "
+            f"{kind.tag!r} keeps per-slot sequential state — serve it "
+            f"through the one-shot prefill path")
+    sub = (lambda s: name(f"attn/{s}")) if name else None
+    y, pool = attn_mod.attention_chunk_paged(p["attn"], cache["kv_pool"],
+                                             page_table, x, cfg, pos=pos,
+                                             name=sub)
+    return y, {"kv_pool": pool}
+
+
 def _mixer_decode(p, cache, x, cfg, kind: LayerKind, pos, name,
                   page_table=None):
     if kind.mixer == "attn":
@@ -189,6 +209,9 @@ def block_apply(p, x, cfg, kind: LayerKind, *, mode: str, positions=None,
     if mode == "decode":
         y, cache = _mixer_decode(p, cache, h, cfg, kind, positions, name,
                                  page_table)
+    elif mode == "chunk":
+        y, cache = _mixer_chunk(p, cache, h, cfg, kind, positions, name,
+                                page_table)
     else:
         y = _mixer_train(p, h, cfg, kind, positions, name)
         if mode == "prefill" and kind.mixer in ("attn", "mla", "hymba"):

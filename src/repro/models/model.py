@@ -191,6 +191,38 @@ class Model:
         logits = constrain(logits, ("batch", "vocab"))
         return logits, cache
 
+    def chunk_step(self, params, cache: Any, tokens: jax.Array,
+                   pos: jax.Array, sample_idx: jax.Array,
+                   page_table: jax.Array) -> tuple[jax.Array, Any]:
+        """One token-budget step: the serving engine's unified
+        prefill-chunk + decode dispatch.
+
+        tokens ``[B, C]`` int32 — row b is slot b's contribution (a
+        prefill chunk, a single decode token, or padding); pos ``[B, C]``
+        absolute positions with ``-1`` padding; sample_idx ``[B]`` — the
+        in-row index whose logits feed sampling (a decode token's
+        successor, or the first token when a row's last prompt chunk
+        lands); page_table ``[B, pages_per_slot]``. Returns
+        (logits [B, V] at the selected positions, cache) — the full
+        ``[B, C, V]`` logits are never materialized.
+
+        Only supported for caches whose every entry is a ``kv_pool``
+        (pure full-attention archs); see `blocks._mixer_chunk`.
+        """
+        cfg = self.cfg
+        adt = jnp.dtype(cfg.activation_dtype)
+        x = embed_lookup(params["embed"], tokens,
+                         scale=cfg.scale_embed).astype(adt)  # [B, C, D]
+        x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
+                                        mode="chunk", positions=pos,
+                                        cache=cache, page_table=page_table)
+        x = norm(params["final_norm"], x, cfg)
+        x = jnp.take_along_axis(
+            x, sample_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        logits = self._head_logits(params, x)
+        logits = constrain(logits, ("batch", "vocab"))
+        return logits, cache
+
     def forward_logits(self, params, batch: dict) -> jax.Array:
         """Full logits [B,S,V] (small models / eval only)."""
         cfg = self.cfg

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.packing import PackedLinear, dequantize_packed
-from repro.distributed import constrain, shard_map
+from repro.distributed import shard_map
 from repro.models import layers
 from repro.models.layers import activation, linear
 

@@ -187,7 +187,7 @@ def cell_costs(cfg: ModelConfig, cell: ShapeCell, quant: bool) -> CellCosts:
 
 def analytic_terms(cfg: ModelConfig, cell_name: str, chips: int,
                    quant: bool) -> dict:
-    from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
     cell = SHAPES[cell_name]
     cc = cell_costs(cfg, cell, quant)
     return {

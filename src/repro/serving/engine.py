@@ -14,19 +14,32 @@ subsystem:
   * streaming — `submit()` / `step()` / `collect()` on top of
     `serving.scheduler` (continuous batching) and `serving.kv_pager`
     (paged KV cache): per-request sampling params, EOS eviction with
-    immediate slot backfill, one fixed-shape jit'd decode dispatch per
-    step regardless of batch composition.
+    immediate slot backfill, one fixed-shape jit'd dispatch per step
+    regardless of batch composition.
+  * chunked prefill — on pure paged-attention archs every step is ONE
+    token-budget dispatch of ``num_slots × prefill_chunk`` positions
+    that packs prefill chunks and decode tokens from mixed requests
+    (`Model.chunk_step`); prompts are fed in fixed-size chunks whose KV
+    scatters straight into the page pools, the first token is sampled
+    when the last chunk lands, and the compiled family is bounded at
+    O(log) context buckets × two block widths (no jit-per-prompt-length
+    family). Archs with bounded
+    sequential per-slot state (rings / SSM / MLA) keep the one-shot
+    prefill path (``chunked_prefill=False`` forces it everywhere — the
+    identity baseline).
   * memory levers — ``kv_quant="int8"`` stores the page pools as int8
     codes + per-(position, head) scale strips (quantize-on-commit,
     dequant fused into the paged attention read; ~1.9× more resident
     tokens per byte), and ``submit(..., prefix_id=...)`` aliases a shared
     system prompt's full pages across requests (refcounted, COW tail).
+    Under chunked prefill the aliased tokens are also **never
+    recomputed** (the chunk attends over the already-committed pages), so
+    sharing saves prefill FLOPs too; `pin_prefix()` keeps a hot prefix
+    resident across bursts.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +92,9 @@ class GenerationEngine:
                  eos_id: int = -1, donate_cache: bool = True,
                  num_slots: int = 4, page_size: int = 16,
                  num_pages: int | None = None, seed: int = 0,
-                 kv_quant: str | None = None):
+                 kv_quant: str | None = None,
+                 prefill_chunk: int = 16,
+                 chunked_prefill: bool | None = None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -100,6 +115,13 @@ class GenerationEngine:
         if kv_quant not in (None, "none", "int8"):
             raise ValueError(f"unknown kv_quant {kv_quant!r}")
         self.kv_quant = model.cfg.kv_quant if kv_quant is None else kv_quant
+        # chunked prefill: None = auto (chunked whenever the arch's paged
+        # cache is pure kv_pool), True = require it, False = one-shot
+        # per-request prefill (the PR-2 baseline path)
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be ≥ 1")
+        self.prefill_chunk = prefill_chunk
+        self.chunked_prefill = chunked_prefill
         self._next_rid = 0
         self._scheduler: Scheduler | None = None
         self._paged_cache = None
@@ -149,8 +171,30 @@ class GenerationEngine:
         self._paged_cache = self.model.init_paged_cache(
             self.num_slots, num_pages, self.page_size, self.max_seq,
             kv_quant=self.kv_quant)
-        # one dispatch per admission: prefill + page commit + first sample
-        # (start_page static: commit skips the aliased shared-prefix pages)
+        chunkable = self._cache_chunkable(self._paged_cache)
+        chunked = chunkable if self.chunked_prefill is None \
+            else self.chunked_prefill
+        if chunked and not chunkable:
+            raise ValueError(
+                "chunked_prefill=True but the arch keeps bounded per-slot "
+                "sequential state (ring/SSM/MLA) — only pure "
+                "paged-attention caches support the chunked path")
+        self._key = jax.random.PRNGKey(self._seed)
+        self._tables_version = -1
+        self._tables_dev = None
+        self._tables_sliced = {}
+        if chunked:
+            # ONE compiled step for everything: prefill chunks + decode
+            # tokens packed into a fixed [num_slots, prefill_chunk] block
+            self._chunk_sampled = jax.jit(self._chunk_step_fn,
+                                          donate_argnums=(1,))
+            self._chunk_greedy = jax.jit(self._chunk_greedy_fn,
+                                         donate_argnums=(1,))
+            return Scheduler(pager, run_batch=self._exec_run_batch,
+                             chunk_size=self.prefill_chunk)
+        # one-shot path: one dispatch per admission fusing prefill + page
+        # commit + first sample (start_page static: commit skips the
+        # aliased shared-prefix pages), jit per prompt length
         self._prefill_fused = jax.jit(self._prefill_commit_fn,
                                       donate_argnums=(1,),
                                       static_argnums=(8,))
@@ -158,11 +202,14 @@ class GenerationEngine:
                                      donate_argnums=(1,))
         self._decode_greedy = jax.jit(self._decode_greedy_fn,
                                       donate_argnums=(1,))
-        self._key = jax.random.PRNGKey(self._seed)
-        self._tables_version = -1
-        self._tables_dev = None
         return Scheduler(pager, prefill_commit=self._exec_prefill_commit,
                          decode=self._exec_decode)
+
+    @staticmethod
+    def _cache_chunkable(cache) -> bool:
+        """True when every cache entry is a page pool (no per-slot
+        sequential state), i.e. the arch can run the chunked path."""
+        return all(set(entry) == {"kv_pool"} for entry in cache.values())
 
     def _prefill_commit_fn(self, params, cache, tokens, slot, pages,
                            temp, topk, key, start_page=0):
@@ -179,6 +226,28 @@ class GenerationEngine:
         tok = sample_batched(logits, temp[None], topk[None], key)
         return tok[0], cache
 
+    def _chunk_step_fn(self, params, cache, page_tables, tokens, pos,
+                       row_slots, sample_idx, temps, topks, key):
+        """Unified token-budget step: tokens/pos [B, C] → sampled [B].
+
+        ``page_tables`` is the (bucketed) [num_slots, n_blocks] table;
+        row b of the dispatch reads/writes slot ``row_slots[b]``'s row.
+        """
+        logits, cache = self.model.chunk_step(params, cache, tokens, pos,
+                                              sample_idx,
+                                              page_table=page_tables[
+                                                  row_slots])
+        return sample_batched(logits, temps, topks, key), cache
+
+    def _chunk_greedy_fn(self, params, cache, page_tables, tokens, pos,
+                         row_slots, sample_idx):
+        """Greedy fast path: no PRNG, no sort/top-k machinery."""
+        logits, cache = self.model.chunk_step(params, cache, tokens, pos,
+                                              sample_idx,
+                                              page_table=page_tables[
+                                                  row_slots])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
     def _decode_paged_fn(self, params, cache, page_tables, token, pos,
                          temps, topks, key):
         logits, cache = self.model.decode_step(params, cache, token, pos,
@@ -192,6 +261,94 @@ class GenerationEngine:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     # --- executor callables handed to the Scheduler (host-side glue) ------
+    def _device_tables(self, n_blocks: int | None = None, host_tables=None):
+        """Version-cached device copy of the pager's page tables, optionally
+        sliced to the first ``n_blocks`` columns (the context bucket).
+        ``host_tables`` lets an executor supply the host array it was
+        handed (the Scheduler contract) instead of reading the pager."""
+        pager = self._scheduler.pager
+        if self._tables_version != pager.version:   # upload only on mutation
+            src = pager.page_tables if host_tables is None else host_tables
+            self._tables_dev = jnp.asarray(src)
+            self._tables_version = pager.version
+            self._tables_sliced = {}
+        if n_blocks is None or n_blocks == self._tables_dev.shape[1]:
+            return self._tables_dev
+        if n_blocks not in self._tables_sliced:
+            self._tables_sliced[n_blocks] = self._tables_dev[:, :n_blocks]
+        return self._tables_sliced[n_blocks]
+
+    def _context_bucket(self, max_pos: int) -> int:
+        """Pages the unified step must read to cover ``max_pos``, rounded
+        up to a geometric bucket (8, 16, 32, … pages, capped at slot
+        capacity).
+
+        The chunk dispatch's attention cost scales with the page-table
+        width it reads, so reading the full slot capacity every step
+        would make a long-context engine pay max_seq work from the first
+        chunk. Bucketing keeps the compiled-variant family at
+        O(log pages_per_slot) — independent of the prompt-length mix —
+        while step cost tracks the actual committed context.
+        """
+        pps = self.max_seq // self.page_size
+        need = max_pos // self.page_size + 1
+        b = 8
+        while b < need:
+            b *= 2
+        return min(b, pps)
+
+    def _exec_run_batch(self, tokens, pos, row_slots, sample_idx, temps,
+                        topks) -> np.ndarray:
+        tables = self._device_tables(self._context_bucket(int(pos.max())))
+        if not temps.any() and not topks.any():
+            out, self._paged_cache = self._chunk_greedy(
+                self.params, self._paged_cache, tables,
+                jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(row_slots), jnp.asarray(sample_idx))
+        else:
+            self._key, sub = jax.random.split(self._key)
+            out, self._paged_cache = self._chunk_sampled(
+                self.params, self._paged_cache, tables,
+                jnp.asarray(tokens), jnp.asarray(pos),
+                jnp.asarray(row_slots), jnp.asarray(sample_idx),
+                jnp.asarray(temps), jnp.asarray(topks), sub)
+        return np.asarray(out)
+
+    def warmup(self, sampled: bool = False) -> int:
+        """Precompile the chunked step family: every geometric context
+        bucket × {decode-only, hybrid} block widths (× the sampled
+        variant on request). All-padding dispatches only touch the
+        scratch page, so serving state is unaffected. Returns the number
+        of variants compiled; no-op on the one-shot path (its prefill
+        compiles per prompt length at admission)."""
+        if self._scheduler is None:
+            self._scheduler = self._serving_init()
+        if not self._scheduler.chunked:
+            return 0
+        # enumerate the bucket family through _context_bucket itself so
+        # warmup can never drift from the schedule the serving loop uses
+        buckets = {self._context_bucket(p)
+                   for p in range(0, self.max_seq, self.page_size)}
+        b = self.num_slots
+        n = 0
+        for nb in sorted(buckets):
+            tables = self._device_tables(nb)
+            for c in sorted({1, self.prefill_chunk}):
+                args = (jnp.zeros((b, c), jnp.int32),
+                        jnp.full((b, c), -1, jnp.int32),
+                        jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32))
+                _, self._paged_cache = self._chunk_greedy(
+                    self.params, self._paged_cache, tables, *args)
+                n += 1
+                if sampled:
+                    self._key, sub = jax.random.split(self._key)
+                    _, self._paged_cache = self._chunk_sampled(
+                        self.params, self._paged_cache, tables, *args,
+                        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
+                        sub)
+                    n += 1
+        return n
+
     def _exec_prefill_commit(self, req: Request, slot: int,
                              pages: list[int], n_shared: int = 0) -> int:
         self._key, sub = jax.random.split(self._key)
@@ -205,11 +362,7 @@ class GenerationEngine:
 
     def _exec_decode(self, page_tables, token, pos, temps, topks
                      ) -> np.ndarray:
-        pager = self._scheduler.pager
-        if self._tables_version != pager.version:   # upload only on mutation
-            self._tables_dev = jnp.asarray(page_tables)
-            self._tables_version = pager.version
-        tables = self._tables_dev
+        tables = self._device_tables(host_tables=page_tables)
         if not temps.any() and not topks.any():
             next_tok, self._paged_cache = self._decode_greedy(
                 self.params, self._paged_cache, tables,
@@ -246,6 +399,27 @@ class GenerationEngine:
             eos_id=self.eos_id if eos_id is None else eos_id,
             prefix_id=prefix_id))
         return rid
+
+    def pin_prefix(self, prefix_id: str) -> int:
+        """Keep ``prefix_id``'s indexed KV pages resident across bursts.
+
+        Call while (or after) a request carrying the prefix is being
+        served — the pin refcounts every page currently indexed under the
+        namespace, plus any registered under it later, so the next burst
+        aliases the prefix without recomputing its KV (under chunked
+        prefill that skips the prefill FLOPs too). Returns the number of
+        pages pinned now. Pinned pages count against the admission
+        budget until `unpin_prefix` releases them.
+        """
+        if self._scheduler is None:
+            self._scheduler = self._serving_init()
+        return self._scheduler.pager.pin_prefix(prefix_id)
+
+    def unpin_prefix(self, prefix_id: str) -> int:
+        """Release a `pin_prefix` hold; unowned pages free exactly once."""
+        if self._scheduler is None:
+            return 0
+        return self._scheduler.pager.unpin_prefix(prefix_id)
 
     def step(self) -> list[tuple[int, int]]:
         """One scheduler step → list of (rid, token) stream events."""

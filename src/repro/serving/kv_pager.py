@@ -36,6 +36,31 @@ Prefix sharing (refcount + content-hash index):
     exactly once, when its last owner releases it; the index entry dies
     with the page.
 
+Chunked prefill (incremental commit):
+
+  * the chunked execution path writes a prompt's KV into the pool one
+    fixed-size chunk at a time (quantize-on-commit per chunk inside the
+    dispatch — same per-(position, head) codec as one-shot commit, so the
+    pages are bit-identical). The pager tracks a per-slot **commit
+    watermark** (`commit_chunk`): chunks must extend it contiguously,
+    rewrites at or below it are allowed (the fully-aliased page-aligned
+    prompt re-runs its final token through identical bytes), and aliased
+    shared-prefix pages seed the watermark at admission — those tokens
+    are **never recomputed**, which is what turns prefix sharing from a
+    memory saving into a prefill-FLOPs saving.
+  * reservation accounting is unchanged: `alloc_slot` still draws the
+    prompt's pages up front and reserves the decode tail, so `extend`
+    during decode cannot fail regardless of how the prompt is chunked.
+  * `register_prefix` runs on the final chunk, once the whole prompt is
+    resident.
+
+Cross-burst prefix pinning: `pin_prefix(prefix_id)` takes a refcount on
+every page indexed under that namespace (and on pages registered under
+it later), so a hot prefix survives its last owning request and the next
+burst aliases it without recomputing — `unpin_prefix` releases the pin,
+returning pages to the free list exactly once when no request holds them
+either.
+
 Admission control is conservative: a request is admitted only if its
 worst-case footprint (prompt + max_new − 1 tokens, minus aliased pages)
 can be covered by free plus already-reserved pages, so `extend` during
@@ -97,6 +122,14 @@ class KVPager:
         # chain-hash → physical page holding that exact token prefix chunk
         self.prefix_index: dict[bytes, int] = {}
         self._page_key: dict[int, bytes] = {}
+        # chunked prefill: per-slot count of prompt tokens whose KV is
+        # resident (aliased prefix tokens count — they were committed by
+        # the request that registered them)
+        self.slot_committed: dict[int, int] = {}
+        # cross-burst pinning: namespace key → pages the pin refcounts
+        self._page_ns: dict[int, bytes] = {}
+        self._pinned_ns: set[bytes] = set()
+        self._pin_pages: dict[bytes, set[int]] = {}
         # bumped on every page-table mutation; lets the engine cache the
         # device copy of the tables instead of re-uploading each step
         self.version = 0
@@ -177,7 +210,8 @@ class KVPager:
         """
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         p = self.cfg.page_size
-        key = repr(prefix_id).encode()
+        ns = repr(prefix_id).encode()
+        key = ns
         pages = self.slot_pages[slot]
         added = 0
         for i in range(len(tokens) // p):
@@ -185,8 +219,59 @@ class KVPager:
             if key not in self.prefix_index:
                 self.prefix_index[key] = pages[i]
                 self._page_key[pages[i]] = key
+                self._page_ns[pages[i]] = ns
+                added += 1
+                if ns in self._pinned_ns:     # sticky pin: new pages join
+                    self.page_ref[pages[i]] += 1
+                    self._pin_pages[ns].add(pages[i])
+        return added
+
+    def pin_prefix(self, prefix_id) -> int:
+        """Keep ``prefix_id``'s indexed pages resident across bursts.
+
+        Takes one refcount on every page currently indexed under the
+        namespace — and, stickily, on pages registered under it later —
+        so the prefix-index entries survive their last owning request and
+        the next burst aliases them without recomputing their KV.
+        Returns the number of pages pinned now. Pinned pages count as in
+        use: over-pinning shrinks the admission budget, so unpin cold
+        prefixes.
+        """
+        ns = repr(prefix_id).encode()
+        self._pinned_ns.add(ns)
+        held = self._pin_pages.setdefault(ns, set())
+        added = 0
+        for pg, page_ns in self._page_ns.items():
+            if page_ns == ns and pg not in held:
+                self.page_ref[pg] += 1
+                held.add(pg)
                 added += 1
         return added
+
+    def unpin_prefix(self, prefix_id) -> int:
+        """Release a `pin_prefix` hold; pages with no owning request left
+        return to the free list (exactly once — the pin was one owner).
+        Returns the number of pages whose pin was released."""
+        ns = repr(prefix_id).encode()
+        self._pinned_ns.discard(ns)
+        pages = self._pin_pages.pop(ns, set())
+        for pg in pages:
+            self._release_page(pg)
+        if pages:
+            self.version += 1
+        return len(pages)
+
+    def _release_page(self, pg: int) -> None:
+        """Drop one refcount; free the page (and its index entry) at 0."""
+        self.page_ref[pg] -= 1
+        if self.page_ref[pg] == 0:
+            self.free_pages.append(pg)
+            key = self._page_key.pop(pg, None)
+            if key is not None:
+                self.prefix_index.pop(key, None)
+            self._page_ns.pop(pg, None)
+        elif self.page_ref[pg] < 0:
+            raise RuntimeError(f"page {pg} double-freed")
 
     def alloc_slot(self, prompt_len: int, max_new_tokens: int,
                    shared_pages: list[int] | None = None
@@ -229,7 +314,31 @@ class KVPager:
         self.slot_reserved[slot] = total - now
         self._reserved += total - now
         self.slot_len[slot] = prompt_len
+        # aliased prefix pages are already-committed content: chunked
+        # prefill starts past them (their tokens are never recomputed)
+        self.slot_committed[slot] = len(shared) * self.cfg.page_size
         return slot, pages
+
+    def commit_chunk(self, slot: int, start: int, end: int) -> None:
+        """Record that prompt tokens ``[start, end)`` of ``slot`` are now
+        resident (the chunked dispatch scatters their K/V directly into
+        the slot's pages).
+
+        Chunks must extend the commit watermark contiguously; rewriting
+        at or below it is allowed (a fully-aliased page-aligned prompt
+        re-runs its final token, writing identical bytes). Pages were
+        drawn at admission, so a chunk can never land on an unmapped
+        page — reservation accounting is untouched.
+        """
+        done = self.slot_committed[slot]
+        if start > done:
+            raise PageAllocationError(
+                f"slot {slot}: chunk [{start}, {end}) leaves a gap past "
+                f"the commit watermark {done}")
+        if end > len(self.slot_pages[slot]) * self.cfg.page_size:
+            raise PageAllocationError(
+                f"slot {slot}: chunk end {end} beyond its mapped pages")
+        self.slot_committed[slot] = max(done, end)
 
     def extend(self, slot: int, new_len: int) -> None:
         """Grow a slot's mapping to cover ``new_len`` tokens (from reserve)."""
@@ -253,17 +362,11 @@ class KVPager:
     def free_slot(self, slot: int) -> None:
         """Release a finished request: refcount-- on every mapped page; a
         page returns to the free list exactly once, when its last owner
-        lets go (its prefix-index entry dies with it)."""
+        (request or pin) lets go (its prefix-index entry dies with it)."""
         for pg in self.slot_pages.pop(slot):
-            self.page_ref[pg] -= 1
-            if self.page_ref[pg] == 0:
-                self.free_pages.append(pg)
-                key = self._page_key.pop(pg, None)
-                if key is not None:
-                    self.prefix_index.pop(key, None)
-            elif self.page_ref[pg] < 0:
-                raise RuntimeError(f"page {pg} double-freed")
+            self._release_page(pg)
         self._reserved -= self.slot_reserved.pop(slot, 0)
+        self.slot_committed.pop(slot, None)
         self.page_tables[slot, :] = 0
         self.slot_len[slot] = 0
         self.free_slots.append(slot)

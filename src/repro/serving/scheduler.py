@@ -1,25 +1,36 @@
 """Continuous-batching request scheduler (AccLLM/EdgeLLM-style runtime).
 
-The decode step is a fixed-shape jit'd function over ``num_slots`` rows;
-the scheduler's job is to keep those rows saturated:
+Two execution models over the same admission/eviction machinery:
 
-  * **admission** — FIFO queue; a request is admitted when a slot is free
-    and the pager can cover its worst-case KV footprint. Admission runs a
-    per-request prefill (jit per prompt length), samples the first token
-    with the request's own sampling params, and commits the prefill KV
-    into the paged cache.
-  * **decode interleaving** — one `step()` decodes every active slot in a
-    single fixed-shape dispatch; per-request positions, temperatures and
-    top-k ride along as arrays, inactive rows decode into the pager's
-    scratch page (masked out host-side).
-  * **EOS eviction + backfill** — a row finishing (EOS or token budget)
-    frees its pages and slot, and the queue is drained into freed slots
-    in the same `step()` call, so the batch never idles a slot while work
-    is queued.
+  * **chunked (token-budget) scheduling** — the default serving path for
+    pure paged-attention archs. Every `step()` issues ONE fixed-shape
+    dispatch of ``num_slots × chunk_size`` token positions: each
+    decoding slot contributes one row (its decode token), the remaining
+    rows are packed with **prefill chunks** from prefilling slots in
+    admission order (a lone long prompt drains the whole idle budget),
+    and unused positions are padded (``pos = -1``). A long prompt no
+    longer monopolizes the engine (the convoy effect): its chunks
+    interleave with everyone else's decode tokens, and the first token
+    is sampled in the same dispatch whose chunk commits the last prompt
+    token. Aliased shared-prefix pages seed the commit watermark at
+    admission, so their tokens are **never recomputed** — prefix sharing
+    saves prefill FLOPs, not just memory. Steps with no prefilling slot
+    narrow to ``c = 1``, so steady-state decode pays zero padding; the
+    compiled family is {decode-only, hybrid} × O(log) context buckets,
+    killing the jit-per-prompt-length family.
+  * **one-shot scheduling** (legacy) — per-request prefill fused with
+    page commit and first-token sampling at admission, single-token
+    decode over all slots. Still required for archs with bounded
+    sequential per-slot state (sliding-window rings, SSM, MLA).
+
+Shared across both: FIFO admission when a slot is free and the pager can
+cover the request's worst-case KV footprint; EOS/budget eviction with
+immediate backfill from the queue in the same `step()`.
 
 The scheduler is deliberately device-agnostic: it talks to the engine
-through two callables (`prefill_commit`, `decode`) and keeps only
-host-side state, so it can be unit-tested with a fake executor.
+through callables (`run_batch` for chunked mode, `prefill_commit` +
+`decode` for one-shot) and keeps only host-side state, so it can be
+unit-tested with a fake executor.
 """
 from __future__ import annotations
 
@@ -46,7 +57,17 @@ class Request:
 @dataclasses.dataclass
 class _SlotState:
     request: Request
-    generated: list[int]          # sampled tokens, first comes from prefill
+    generated: list[int]          # sampled tokens (empty while prefilling)
+    # prompt tokens already scheduled through the model. Deliberately NOT
+    # the pager's slot_committed (KV-resident tokens): for a fully aliased
+    # page-aligned prompt the pager watermark covers the whole prompt, but
+    # this counter is seeded one short so the final token still runs and
+    # produces the first-token logits.
+    committed: int = 0
+
+    @property
+    def prefilling(self) -> bool:
+        return self.committed < len(self.request.tokens)
 
     @property
     def next_pos(self) -> int:
@@ -57,7 +78,7 @@ class _SlotState:
     def done(self) -> bool:
         r = self.request
         return (len(self.generated) >= r.max_new_tokens
-                or (r.eos_id >= 0 and self.generated
+                or (r.eos_id >= 0 and bool(self.generated)
                     and self.generated[-1] == r.eos_id))
 
 
@@ -65,27 +86,49 @@ class _SlotState:
 class SchedulerStats:
     admitted: int = 0
     finished: int = 0
-    decode_steps: int = 0
+    decode_steps: int = 0         # unified dispatches in chunked mode
     slot_tokens: int = 0          # useful tokens produced by decode rows
     slot_steps: int = 0           # total rows dispatched (incl. idle)
     prefix_shared_pages: int = 0  # pages aliased instead of allocated
+    prefill_chunks: int = 0       # prompt chunks dispatched (chunked mode)
+    prefill_tokens: int = 0       # prompt tokens run through the model
+    prefill_tokens_skipped: int = 0   # aliased prompt tokens never re-run
 
 
 class Scheduler:
-    """Queue + slot bookkeeping over an executor's jit'd prefill/decode."""
+    """Queue + slot bookkeeping over an executor's jit'd step functions.
+
+    Pass ``run_batch`` for chunked (token-budget) scheduling, or both
+    ``prefill_commit`` and ``decode`` for one-shot scheduling:
+
+      * run_batch(tokens [B, C], pos [B, C], row_slots [B],
+        sample_idx [B], temps [B], topks [B]) → sampled [B] — one
+        fixed-shape dispatch that scatters every valid token's KV into
+        the paged cache (row b reads/writes slot ``row_slots[b]``'s
+        pages) and returns, per row, the token sampled at ``sample_idx``
+        (consumed only for rows that finished their prompt or decoded).
+      * prefill_commit(request, slot, pages, n_shared) → first token;
+        decode(page_tables, token, pos, temps, topks) → next tokens.
+    """
 
     def __init__(self, pager: KVPager, *,
-                 prefill_commit: Callable[[Request, int, list[int], int],
-                                          int],
-                 decode: Callable[[np.ndarray, np.ndarray, np.ndarray,
-                                   np.ndarray, np.ndarray], np.ndarray]):
+                 prefill_commit: Callable | None = None,
+                 decode: Callable | None = None,
+                 run_batch: Callable | None = None,
+                 chunk_size: int = 16):
         self.pager = pager
         self.num_slots = pager.cfg.num_slots
-        # prefill_commit(request, slot, pages, n_shared) → first sampled
-        # token; the engine fuses prefill + page commit + sampling into one
-        # dispatch, skipping the commit of the n_shared aliased prefix pages
+        self.chunked = run_batch is not None
+        if self.chunked:
+            if chunk_size < 1:
+                raise ValueError("chunk_size must be ≥ 1")
+        elif prefill_commit is None or decode is None:
+            raise ValueError("need run_batch (chunked) or "
+                             "prefill_commit + decode (one-shot)")
+        self._run_batch = run_batch
         self._prefill_commit = prefill_commit
         self._decode = decode
+        self.chunk_size = chunk_size
         self.queue: deque[Request] = deque()
         self.slots: dict[int, _SlotState] = {}
         self.finished: dict[int, np.ndarray] = {}
@@ -118,14 +161,17 @@ class Scheduler:
         return not self.queue and not self.slots
 
     def step(self) -> list[tuple[int, int]]:
-        """Admit → decode all slots once → evict + backfill.
+        """Admit → one dispatch over all slots → evict + backfill.
 
         Returns ``(rid, token)`` stream events in emission order.
         """
         events: list[tuple[int, int]] = []
         self._admit(events)
         if self.slots:
-            self._decode_once(events)
+            if self.chunked:
+                self._step_chunked(events)
+            else:
+                self._decode_once(events)
             self._admit(events)          # backfill slots freed by EOS now
         return events
 
@@ -136,10 +182,19 @@ class Scheduler:
         out, self.finished = self.finished, {}
         return out
 
-    # ------------------------------------------------------------ internals
+    # ------------------------------------------------------------ admission
     def _admit(self, events: list[tuple[int, int]]) -> None:
         while self.queue:
             req = self.queue[0]
+            # chunked mode registers a prefix on its final chunk; while a
+            # slot with the same namespace is still prefilling, hold the
+            # queue head so the follower admits against the full
+            # registered match instead of racing it to zero sharing
+            if (self.chunked and req.prefix_id is not None
+                    and any(st.prefilling
+                            and st.request.prefix_id == req.prefix_id
+                            for st in self.slots.values())):
+                break
             # prefix detection at admission: requests that opted in
             # (prefix_id set) alias any already-resident full pages whose
             # content-hash chain matches their prompt — those pages don't
@@ -153,17 +208,117 @@ class Scheduler:
             slot, pages = self.pager.alloc_slot(len(req.tokens),
                                                 req.max_new_tokens,
                                                 shared_pages=shared)
+            self.stats.prefix_shared_pages += len(shared)
+            self.stats.admitted += 1
+            if self.chunked:
+                # aliased tokens are already resident: chunking starts past
+                # them (at least the final prompt token always runs, so the
+                # first-token logits exist even for a fully aliased prompt)
+                skip = min(len(shared) * self.pager.cfg.page_size,
+                           len(req.tokens) - 1)
+                self.slots[slot] = _SlotState(request=req, generated=[],
+                                              committed=skip)
+                self.stats.prefill_tokens_skipped += skip
+                continue
+            # one-shot: fused prefill + commit + first-token sample now
             tok = int(self._prefill_commit(req, slot, pages, len(shared)))
             if req.prefix_id is not None:
                 self.pager.register_prefix(slot, req.tokens, req.prefix_id)
-            self.stats.prefix_shared_pages += len(shared)
-            st = _SlotState(request=req, generated=[tok])
+            st = _SlotState(request=req, generated=[tok],
+                            committed=len(req.tokens))
             self.slots[slot] = st
-            self.stats.admitted += 1
             events.append((req.rid, tok))
             if st.done:
                 self._finish(slot)
 
+    # ------------------------------------------- chunked (token-budget) step
+    def _step_chunked(self, events: list[tuple[int, int]]) -> None:
+        """One fixed-shape dispatch packing prefill chunks + decode tokens.
+
+        The dispatch is a ``[num_slots, c]`` token block — the step's
+        token budget. Each decoding slot takes one row (its single decode
+        token); the remaining rows are handed to prefilling slots in
+        admission order as consecutive fixed-size chunks, so a lone long
+        prompt drains the whole idle budget instead of one chunk per
+        step. Rows carry their slot in ``row_slots`` (the executor
+        gathers that slot's page-table row per dispatch row). When no
+        slot is prefilling the block narrows to ``c = 1`` — steady-state
+        decode pays zero padding, and the compiled-variant family stays
+        at {decode-only, hybrid} × context buckets.
+        """
+        b = self.num_slots
+        prefilling = [s for s, st in self.slots.items() if st.prefilling]
+        c = self.chunk_size if prefilling else 1
+        tokens = np.zeros((b, c), np.int32)
+        pos = np.full((b, c), -1, np.int32)
+        row_slots = np.zeros(b, np.int32)
+        temps = np.zeros(b, np.float32)
+        topks = np.zeros(b, np.int32)
+        sample_idx = np.zeros(b, np.int32)
+        sample_row: dict[int, int] = {}       # slot → row holding its sample
+        chunk_tok: dict[int, int] = {}        # slot → prompt tokens this step
+        row = 0
+        for slot, st in self.slots.items():   # decode rows first
+            if st.prefilling:
+                continue
+            r = st.request
+            tokens[row, 0] = st.generated[-1]
+            pos[row, 0] = st.next_pos
+            row_slots[row] = slot
+            self.pager.extend(slot, st.next_pos + 1)
+            sample_row[slot] = row
+            temps[row] = r.temperature
+            topks[row] = r.top_k
+            row += 1
+        for slot in prefilling:               # pack chunks into free rows
+            if row >= b:
+                break
+            st = self.slots[slot]
+            r = st.request
+            start = st.committed
+            take = min(len(r.tokens) - start, (b - row) * c)
+            done = 0
+            while done < take:
+                n = min(c, take - done)
+                tokens[row, :n] = r.tokens[start + done:start + done + n]
+                pos[row, :n] = np.arange(start + done, start + done + n)
+                row_slots[row] = slot
+                self.stats.prefill_chunks += 1
+                done += n
+                if start + done == len(r.tokens):
+                    sample_row[slot] = row    # last chunk lands this step
+                    sample_idx[row] = n - 1
+                    temps[row] = r.temperature
+                    topks[row] = r.top_k
+                row += 1
+            self.pager.commit_chunk(slot, start, start + take)
+            chunk_tok[slot] = take
+        sampled = self._run_batch(tokens, pos, row_slots, sample_idx,
+                                  temps, topks)
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += b
+        for slot in list(self.slots):
+            st = self.slots[slot]
+            if slot in chunk_tok:
+                st.committed += chunk_tok[slot]
+                self.stats.prefill_tokens += chunk_tok[slot]
+            row = sample_row.get(slot)
+            if row is None or st.prefilling:
+                continue                      # mid-prefill: nothing sampled
+            first = slot in chunk_tok         # prompt completed this step
+            if first and st.request.prefix_id is not None:
+                # register on the final chunk: the whole prompt is resident
+                self.pager.register_prefix(slot, st.request.tokens,
+                                           st.request.prefix_id)
+            tok = int(sampled[row])
+            st.generated.append(tok)
+            if not first:
+                self.stats.slot_tokens += 1
+            events.append((st.request.rid, tok))
+            if st.done:
+                self._finish(slot)
+
+    # ------------------------------------------------- one-shot decode step
     def _decode_once(self, events: list[tuple[int, int]]) -> None:
         b = self.num_slots
         token = np.zeros(b, np.int32)

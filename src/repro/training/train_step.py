@@ -17,7 +17,7 @@ Distributed-optimization knobs (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """KVPager: page alloc/free/reuse accounting + commit scatter layout."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as C
-from repro.core import (AWQConfig, CalibrationCapture, QuantConfig,
+from repro.core import (CalibrationCapture,
                         quantize_params)
 from repro.core.packing import PackedLinear
 from repro.core.pipeline import model_size_bytes

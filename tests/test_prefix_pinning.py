@@ -1,0 +1,151 @@
+"""Cross-burst prefix pinning: index entries survive their last owner,
+pages free exactly once, prefill FLOPs are skipped across bursts."""
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+from repro.serving import GenerationEngine
+from repro.serving.kv_pager import KVPager, PagerConfig
+
+
+def _pager(num_pages=17, page_size=4, num_slots=4, pages_per_slot=4):
+    return KVPager(PagerConfig(num_pages=num_pages, page_size=page_size,
+                               num_slots=num_slots,
+                               pages_per_slot=pages_per_slot))
+
+
+def _toks(*vals):
+    return np.asarray(vals, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pager-level invariants
+# ---------------------------------------------------------------------------
+
+def test_pin_keeps_index_alive_past_last_owner():
+    p = _pager()
+    prompt = _toks(*range(10))                  # 2 full pages + tail
+    s_a, pages_a = p.alloc_slot(10, 3)
+    p.register_prefix(s_a, prompt, "sys")
+    assert p.pin_prefix("sys") == 2
+
+    p.free_slot(s_a)                            # last REQUEST owner gone
+    assert p.match_prefix(prompt, "sys") == pages_a[:2]  # index survives
+    assert p.pages_in_use == 2                  # pinned pages stay drawn
+    assert (p.page_ref[pages_a[:2]] == 1).all()
+
+    # a second burst aliases the pinned pages without recomputing them
+    s_b, pages_b = p.alloc_slot(10, 3, shared_pages=pages_a[:2])
+    assert pages_b[:2] == pages_a[:2]
+    assert p.slot_committed[s_b] == 8           # 2 aliased pages pre-committed
+    p.free_slot(s_b)
+    assert p.match_prefix(prompt, "sys") == pages_a[:2]
+
+    assert p.unpin_prefix("sys") == 2           # last owner: freed exactly once
+    assert p.pages_in_use == 0
+    assert (p.page_ref == 0).all()
+    assert not p.prefix_index
+    assert len(set(p.free_pages)) == len(p.free_pages)
+
+
+def test_pin_is_sticky_for_later_registrations():
+    p = _pager()
+    assert p.pin_prefix("sys") == 0             # nothing indexed yet
+    s_a, pages_a = p.alloc_slot(8, 2)
+    p.register_prefix(s_a, _toks(*range(8)), "sys")
+    p.free_slot(s_a)                            # pin (taken at register) holds
+    assert p.match_prefix(_toks(*range(8)), "sys") == pages_a[:2]
+    assert p.unpin_prefix("sys") == 2
+    assert p.pages_in_use == 0 and (p.page_ref == 0).all()
+
+
+def test_pin_namespaces_are_independent():
+    p = _pager()
+    s_a, _ = p.alloc_slot(4, 1)
+    p.register_prefix(s_a, _toks(*range(4)), "alice")
+    s_b, _ = p.alloc_slot(4, 1)
+    p.register_prefix(s_b, _toks(*range(4)), "bob")
+    p.pin_prefix("alice")
+    p.free_slot(s_a)
+    p.free_slot(s_b)
+    assert p.match_prefix(_toks(*range(4)), "alice")    # pinned: survives
+    assert p.match_prefix(_toks(*range(4)), "bob") == []  # unpinned: died
+    p.unpin_prefix("alice")
+    assert p.pages_in_use == 0 and (p.page_ref == 0).all()
+
+
+def test_unpin_unknown_is_noop_and_double_unpin_safe():
+    p = _pager()
+    assert p.unpin_prefix("ghost") == 0
+    s_a, _ = p.alloc_slot(4, 1)
+    p.register_prefix(s_a, _toks(*range(4)), "sys")
+    p.pin_prefix("sys")
+    p.free_slot(s_a)
+    assert p.unpin_prefix("sys") == 1
+    assert p.unpin_prefix("sys") == 0           # second unpin: nothing held
+    assert p.pages_in_use == 0 and (p.page_ref == 0).all()
+
+
+def test_pinned_pages_count_against_admission():
+    # 5 usable pages, P=4: a pinned 2-page prefix leaves 3 free pages
+    p = _pager(num_pages=6, page_size=4, num_slots=2, pages_per_slot=4)
+    s_a, _ = p.alloc_slot(8, 1)
+    p.register_prefix(s_a, _toks(*range(8)), "sys")
+    p.pin_prefix("sys")
+    p.free_slot(s_a)
+    assert not p.can_admit(12, 2)               # 4 fresh pages: too big
+    assert p.can_admit(12, 2, n_shared=2)       # aliasing the pin: fits
+    p.unpin_prefix("sys")
+    assert p.can_admit(12, 2)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: FLOPs skipped across bursts
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_pin_skips_prefill_flops_across_bursts(model_and_params):
+    cfg, m, params = model_and_params
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+
+    def burst(eng, seed):
+        r = np.random.default_rng(seed)
+        prompts = [np.concatenate([prefix,
+                                   r.integers(0, cfg.vocab_size, (5,)
+                                              ).astype(np.int32)])
+                   for _ in range(3)]
+        rids = [eng.submit(p, 4, prefix_id="sys") for p in prompts]
+        out = eng.drain()
+        return [list(out[r_]) for r_ in rids], prompts
+
+    eng = GenerationEngine(m, params, max_seq=64, num_slots=4, page_size=8,
+                           prefill_chunk=8)
+    eng.pin_prefix("sys")       # sticky: pre-declare the hot prefix — pages
+    burst(eng, 0)               # auto-pin as the first burst registers them
+    pager = eng._scheduler.pager
+    assert pager.pages_in_use == 2              # only the pinned prefix
+    skipped_before = eng.scheduler_stats.prefill_tokens_skipped
+
+    streams, prompts = burst(eng, 1)            # second burst: all alias
+    # every request skipped the whole 2-page prefix — cross-burst FLOP reuse
+    assert (eng.scheduler_stats.prefill_tokens_skipped - skipped_before
+            == 3 * 16)
+    # pinned serving stays token-identical to a cold unpinned engine
+    cold = GenerationEngine(m, params, max_seq=64, num_slots=4, page_size=8,
+                            prefill_chunk=8)
+    rids = [cold.submit(p, 4) for p in prompts]
+    ref = cold.drain()
+    assert streams == [list(ref[r_]) for r_ in rids]
+
+    eng.unpin_prefix("sys")
+    assert pager.pages_in_use == 0
+    assert (pager.page_ref == 0).all()

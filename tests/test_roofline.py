@@ -1,5 +1,4 @@
 """Roofline analyzer: HLO text parsing on synthetic modules."""
-import numpy as np
 
 from repro.roofline.analysis import (RooflineTerms, _loop_multipliers,
                                      _split_computations, _type_bytes,

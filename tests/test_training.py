@@ -65,7 +65,6 @@ def test_bf16_grad_comm_close_to_f32():
 
 
 def test_zero1_pspec_adds_data_axis():
-    import os, subprocess, sys
     # needs a multi-device mesh — covered in test_distributed.py; here just
     # check the pure function against a fake mesh via jax.sharding API
     from repro.distributed.sharding import zero1_pspec

@@ -1,0 +1,91 @@
+"""Speculative decoding demo: n-gram self-drafting through the unified
+chunk dispatch, with live acceptance/rollback accounting.
+
+Decode is memory-bandwidth bound: every step streams ALL weights to emit
+one token (the paper's 5.1 tok/s ceiling). Speculative decoding amortizes
+one weight pass over several tokens:
+
+  * a tiny qwen2.5-style model serves a burst of **repetitive prompts**
+    (tiled patterns — stand-ins for code, lists, templated chat) with
+    ``spec_decode="ngram"``: each decoding slot's own context proposes
+    its continuation by prompt lookup — no second model,
+  * the slot's per-step row becomes a token run ``[last, d_1 … d_k]``;
+    the SAME unified dispatch that packs prefill chunks verifies all
+    drafts in one weight pass and samples a corrected/bonus token,
+  * accepted drafts stream out together; a rejected suffix rolls the
+    paged KV back (`KVPager.truncate` — pages return to the free list,
+    free-exactly-once preserved),
+  * greedy outputs are **token-identical** to ordinary decode — the demo
+    checks this against a drafting-free engine at the end.
+
+Also shown: ``spec_decode="draft_model"`` (a second, smaller model
+drafts greedily with its own dense cache) — here the "draft" is the
+target itself, so acceptance is ~100% and every step emits k+1 tokens.
+
+Run:  PYTHONPATH=src python examples/serve_speculative.py
+"""
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import build_model
+from repro.serving import GenerationEngine
+
+
+def serve(eng, prompts, max_new, label):
+    rids = [eng.submit(p, max_new) for p in prompts]
+    print(f"\n--- {label} ---")
+    step = 0
+    while not eng.idle:
+        events = eng.step()
+        step += 1
+        if events:
+            line = " ".join(f"r{rid}:{tok}" for rid, tok in events)
+            print(f"step {step:2d}  [{len(events)} tokens]  {line}")
+    st = eng.scheduler_stats
+    print(f"{st.decode_steps} weight passes for "
+          f"{st.slot_tokens} decode tokens")
+    if st.spec_rows:
+        print(f"drafted {st.draft_tokens}, accepted {st.accepted_tokens} "
+              f"({st.acceptance_rate:.0%}); "
+              f"{st.spec_tokens_per_row:.2f} tokens per verify run; "
+              f"{st.rollbacks} rollbacks returned "
+              f"{st.rollback_pages} KV pages")
+    print(f"padding: {st.padding_waste:.0%} of dispatched positions "
+          f"(run-length packer)")
+    out = eng.collect()
+    return [list(out[r]) for r in rids]
+
+
+def main():
+    cfg = configs.get_smoke_config("qwen25-05b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    # repetitive prompts: short patterns tiled — prompt lookup's home turf
+    prompts = [np.tile(rng.integers(0, cfg.vocab_size, (4,)
+                                    ).astype(np.int32), 6)
+               for _ in range(3)]
+    common = dict(max_seq=96, num_slots=4, page_size=8, prefill_chunk=8)
+
+    ngram = serve(
+        GenerationEngine(model, params, spec_decode="ngram", spec_k=4,
+                         **common),
+        prompts, 16, 'spec_decode="ngram" (prompt-lookup self-drafting)')
+
+    drafted = serve(
+        GenerationEngine(model, params, spec_decode="draft_model", spec_k=4,
+                         draft_model=model, draft_params=params, **common),
+        prompts, 16, 'spec_decode="draft_model" (draft = target: ~100% '
+        'acceptance)')
+
+    plain = serve(GenerationEngine(model, params, **common),
+                  prompts, 16, "no speculation (baseline)")
+
+    assert ngram == drafted == plain
+    print("\ngreedy streams are token-identical across all three engines")
+
+
+if __name__ == "__main__":
+    main()

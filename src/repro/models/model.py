@@ -193,18 +193,24 @@ class Model:
 
     def chunk_step(self, params, cache: Any, tokens: jax.Array,
                    pos: jax.Array, sample_idx: jax.Array,
-                   page_table: jax.Array) -> tuple[jax.Array, Any]:
+                   page_table: jax.Array,
+                   num_logits: int = 1) -> tuple[jax.Array, Any]:
         """One token-budget step: the serving engine's unified
         prefill-chunk + decode dispatch.
 
         tokens ``[B, C]`` int32 — row b is slot b's contribution (a
-        prefill chunk, a single decode token, or padding); pos ``[B, C]``
-        absolute positions with ``-1`` padding; sample_idx ``[B]`` — the
-        in-row index whose logits feed sampling (a decode token's
-        successor, or the first token when a row's last prompt chunk
-        lands); page_table ``[B, pages_per_slot]``. Returns
-        (logits [B, V] at the selected positions, cache) — the full
-        ``[B, C, V]`` logits are never materialized.
+        prefill chunk, a variable-length decode/verify token run, or
+        padding); pos ``[B, C]`` absolute positions with ``-1`` padding;
+        sample_idx ``[B]`` — the first in-row index whose logits feed
+        sampling (a decode token's successor, or the first token when a
+        row's last prompt chunk lands); page_table
+        ``[B, pages_per_slot]``. ``num_logits`` (static) is the number of
+        consecutive in-row positions whose logits are materialized,
+        starting at ``sample_idx`` and clipped to the row — speculative
+        verify runs need the distribution after every draft token, plain
+        decode needs one. Returns (logits [B, V] for ``num_logits == 1``
+        or [B, num_logits, V] otherwise, cache) — the full ``[B, C, V]``
+        logits are never materialized.
 
         Only supported for caches whose every entry is a ``kv_pool``
         (pure full-attention archs); see `blocks._mixer_chunk`.
@@ -217,10 +223,19 @@ class Model:
                                         mode="chunk", positions=pos,
                                         cache=cache, page_table=page_table)
         x = norm(params["final_norm"], x, cfg)
-        x = jnp.take_along_axis(
-            x, sample_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        c = x.shape[1]
+        if num_logits == 1:
+            x = jnp.take_along_axis(
+                x, sample_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            logits = self._head_logits(params, x)
+            logits = constrain(logits, ("batch", "vocab"))
+            return logits, cache
+        idx = jnp.clip(sample_idx[:, None].astype(jnp.int32)
+                       + jnp.arange(num_logits, dtype=jnp.int32)[None, :],
+                       0, c - 1)
+        x = jnp.take_along_axis(x, idx[..., None], axis=1)  # [B, R, D]
         logits = self._head_logits(params, x)
-        logits = constrain(logits, ("batch", "vocab"))
+        logits = constrain(logits, ("batch", None, "vocab"))
         return logits, cache
 
     def forward_logits(self, params, batch: dict) -> jax.Array:

@@ -2,4 +2,5 @@ from repro.serving.engine import (  # noqa: F401
     GenerationEngine, SamplerConfig, sample, sample_batched)
 from repro.serving.kv_pager import (  # noqa: F401
     KVPager, PageAllocationError, PagerConfig, commit_prefill)
-from repro.serving.scheduler import Request, Scheduler  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request, Scheduler, ngram_propose, width_family)

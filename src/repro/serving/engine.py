@@ -36,6 +36,16 @@ subsystem:
     recomputed** (the chunk attends over the already-committed pages), so
     sharing saves prefill FLOPs too; `pin_prefix()` keeps a hot prefix
     resident across bursts.
+  * speculative decoding — ``spec_decode="ngram"`` (prompt-lookup
+    self-drafting, no second model) or ``"draft_model"`` (a small greedy
+    drafter with its own dense cache) proposes up to ``spec_k`` tokens
+    per decoding slot; the unified chunk dispatch verifies them in ONE
+    weight pass (a verify run is just a multi-token decode row), a
+    device-side acceptance sampler keeps outputs distribution-faithful
+    (token-identical to sequential decode under greedy), and rejected
+    suffixes roll the paged KV back via `KVPager.truncate`. One weight
+    stream now amortizes over up to ``spec_k + 1`` emitted tokens — the
+    lever the paper's 5.1 tok/s memory-bandwidth ceiling asks for.
 """
 from __future__ import annotations
 
@@ -94,7 +104,12 @@ class GenerationEngine:
                  num_pages: int | None = None, seed: int = 0,
                  kv_quant: str | None = None,
                  prefill_chunk: int = 16,
-                 chunked_prefill: bool | None = None):
+                 chunked_prefill: bool | None = None,
+                 spec_decode: str | None = None,
+                 spec_k: int = 4,
+                 spec_ngram_max: int = 3,
+                 draft_model=None, draft_params=None,
+                 draft_fn=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -122,6 +137,32 @@ class GenerationEngine:
             raise ValueError("prefill_chunk must be ≥ 1")
         self.prefill_chunk = prefill_chunk
         self.chunked_prefill = chunked_prefill
+        # speculative decoding: "ngram" (prompt-lookup self-drafter, no
+        # second model) or "draft_model" (greedy small-model drafter — pass
+        # draft_model + draft_params, or a custom draft_fn for testing)
+        if spec_decode not in (None, "ngram", "draft_model"):
+            raise ValueError(f"unknown spec_decode {spec_decode!r}")
+        if spec_decode is not None and spec_k < 1:
+            raise ValueError("spec_k must be ≥ 1")
+        if spec_decode == "draft_model" and draft_model is None \
+                and draft_fn is None:
+            raise ValueError("spec_decode='draft_model' needs draft_model "
+                             "(+ draft_params) or a draft_fn")
+        if draft_model is not None:
+            chunkable = self._cache_chunkable(jax.eval_shape(
+                lambda: draft_model.init_paged_cache(1, 2, page_size,
+                                                     page_size)))
+            if not chunkable:
+                raise ValueError(
+                    "draft_model keeps bounded per-slot sequential state "
+                    "(ring/SSM/MLA) — the draft cache must be pure dense "
+                    "full attention")
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self.spec_ngram_max = spec_ngram_max
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+        self._custom_draft_fn = draft_fn
         self._next_rid = 0
         self._scheduler: Scheduler | None = None
         self._paged_cache = None
@@ -179,19 +220,40 @@ class GenerationEngine:
                 "chunked_prefill=True but the arch keeps bounded per-slot "
                 "sequential state (ring/SSM/MLA) — only pure "
                 "paged-attention caches support the chunked path")
+        if self.spec_decode is not None and not chunked:
+            raise ValueError(
+                "spec_decode requires the chunked serving path (verify "
+                "runs are multi-token rows of the unified chunk dispatch)")
         self._key = jax.random.PRNGKey(self._seed)
         self._tables_version = -1
         self._tables_dev = None
         self._tables_sliced = {}
         if chunked:
             # ONE compiled step for everything: prefill chunks + decode
-            # tokens packed into a fixed [num_slots, prefill_chunk] block
+            # token runs packed into a fixed [num_slots, c] block
             self._chunk_sampled = jax.jit(self._chunk_step_fn,
                                           donate_argnums=(1,))
             self._chunk_greedy = jax.jit(self._chunk_greedy_fn,
                                          donate_argnums=(1,))
+            draft_fn = None
+            sched_spec = None
+            if self.spec_decode is not None:
+                self._spec_greedy = jax.jit(self._spec_greedy_fn,
+                                            donate_argnums=(1,))
+                self._spec_sampled = jax.jit(self._spec_sampled_fn,
+                                             donate_argnums=(1,))
+                sched_spec = "ngram" if self.spec_decode == "ngram" \
+                    else "draft_fn"
+                if self.spec_decode == "draft_model":
+                    draft_fn = self._custom_draft_fn
+                    if draft_fn is None:
+                        self._draft_init()
+                        draft_fn = self._draft_fn
             return Scheduler(pager, run_batch=self._exec_run_batch,
-                             chunk_size=self.prefill_chunk)
+                             chunk_size=self.prefill_chunk,
+                             spec_decode=sched_spec, spec_k=self.spec_k,
+                             draft_fn=draft_fn,
+                             ngram_max=self.spec_ngram_max)
         # one-shot path: one dispatch per admission fusing prefill + page
         # commit + first sample (start_page static: commit skips the
         # aliased shared-prefix pages), jit per prompt length
@@ -248,6 +310,177 @@ class GenerationEngine:
                                                   row_slots])
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
+    # --- speculative verify steps -----------------------------------------
+    # A verify row is just a multi-token decode row of the unified chunk
+    # dispatch: tokens[b, sample_idx[b] : sample_idx[b] + 1 + n_draft[b]]
+    # is the run [last_sampled, d_1 … d_k] at consecutive positions, and
+    # `chunk_step(num_logits = spec_k + 1)` returns the target
+    # distribution after each of them. Acceptance runs on device, so the
+    # vocab-sized distributions never leave it: each row returns its
+    # leading-accept count and ONE corrected/bonus token.
+
+    def _spec_gather_drafts(self, tokens, sample_idx, r):
+        """draft_next [B, R]: the input token each gathered logit must
+        predict — tokens at in-row index sample_idx + j + 1 (clipped;
+        indices past a row's run are masked by n_draft downstream)."""
+        c = tokens.shape[1]
+        j = jnp.arange(r, dtype=jnp.int32)[None, :]
+        nxt = jnp.clip(sample_idx[:, None].astype(jnp.int32) + j + 1,
+                       0, c - 1)
+        return jnp.take_along_axis(tokens, nxt, axis=1), j
+
+    def _spec_greedy_fn(self, params, cache, page_tables, tokens, pos,
+                        row_slots, sample_idx, n_draft):
+        """Greedy verify: accept the longest draft prefix that matches the
+        argmax chain; the fix token is the argmax after it (the corrected
+        token on rejection, the bonus token on full acceptance) — exactly
+        the tokens sequential greedy decode would emit."""
+        r = self.spec_k + 1
+        logits, cache = self.model.chunk_step(
+            params, cache, tokens, pos, sample_idx,
+            page_table=page_tables[row_slots], num_logits=r)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [B, R]
+        draft_next, j = self._spec_gather_drafts(tokens, sample_idx, r)
+        ok = (draft_next == g) & (j < n_draft[:, None])
+        n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+        fix = jnp.take_along_axis(g, n_acc[:, None], axis=1)[:, 0]
+        return fix, n_acc, cache
+
+    def _spec_sampled_fn(self, params, cache, page_tables, tokens, pos,
+                         row_slots, sample_idx, n_draft, temps, topks, key):
+        """Acceptance sampling for point-mass drafts, distribution-faithful
+        per row: draft d_j is accepted with probability p(d_j) under the
+        row's (temperature / top-k filtered) target distribution; on the
+        first rejection the fix token is drawn from the residual — the
+        target with d_j removed, renormalized — and on full acceptance
+        from the plain target at the bonus position. Marginally the
+        emitted stream is distributed exactly as sequential sampling
+        (greedy rows reduce to the argmax chain of `_spec_greedy_fn`).
+        Rows with ``n_draft == 0`` degenerate to one plain sample at
+        ``sample_idx`` — the pre-speculation contract.
+        """
+        r = self.spec_k + 1
+        logits, cache = self.model.chunk_step(
+            params, cache, tokens, pos, sample_idx,
+            page_table=page_tables[row_slots], num_logits=r)   # [B, R, V]
+        v = logits.shape[-1]
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None, None]
+        kidx = jnp.broadcast_to(
+            jnp.clip(topks - 1, 0, v - 1)[:, None, None],
+            (logits.shape[0], r, 1))
+        desc = -jnp.sort(-scaled, axis=-1)
+        kth = jnp.take_along_axis(desc, kidx, axis=-1)
+        filtered = jnp.where(scaled < kth, -1e30, scaled)
+        scaled = jnp.where((topks > 0)[:, None, None], filtered, scaled)
+        probs = jax.nn.softmax(scaled, axis=-1)
+        draft_next, j = self._spec_gather_drafts(tokens, sample_idx, r)
+        p_draft = jnp.take_along_axis(probs, draft_next[..., None],
+                                      axis=-1)[..., 0]
+        ku, kr, kb = jax.random.split(key, 3)
+        u = jax.random.uniform(ku, p_draft.shape)
+        greedy = (temps == 0.0)[:, None]
+        ok = jnp.where(greedy, draft_next == g, u < p_draft)
+        ok &= j < n_draft[:, None]
+        n_acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+        dmask = jax.nn.one_hot(draft_next, v, dtype=bool)
+        rej = jax.random.categorical(kr, jnp.where(dmask, -1e30, scaled))
+        bon = jax.random.categorical(kb, scaled)
+        # greedy rows: the residual argmax IS the global argmax (a greedy
+        # rejection means draft ≠ argmax), and the bonus is the argmax too
+        rej = jnp.where(greedy, g, rej.astype(jnp.int32))
+        bon = jnp.where(greedy, g, bon.astype(jnp.int32))
+        fix_rej = jnp.take_along_axis(rej, n_acc[:, None], axis=1)[:, 0]
+        fix_bon = jnp.take_along_axis(bon, n_acc[:, None], axis=1)[:, 0]
+        fix = jnp.where(n_acc == n_draft, fix_bon, fix_rej)
+        return fix, n_acc, cache
+
+    # --- draft-model drafting (spec_decode="draft_model") -----------------
+    # The draft model keeps a DENSE per-slot cache [num_slots, max_seq]
+    # (it is small by construction — paging it would buy nothing): lazy
+    # per-slot prefill when a request starts decoding, then k + 1 greedy
+    # decode steps per scheduler step (the extra step writes the last
+    # draft's KV, so after full acceptance the draft cache is already
+    # caught up to the bonus token's position). Rejected-draft KV is
+    # simply overwritten — positions are absolute, and the next step's
+    # inputs rewrite every position past the accepted stream before any
+    # causal read can see it.
+
+    def _draft_init(self):
+        self._draft_cache = self.draft_model.init_cache(self.num_slots,
+                                                        self.max_seq)
+        self._draft_rid: dict[int, int] = {}
+        self._draft_prefill = jax.jit(self._draft_prefill_fn,
+                                      donate_argnums=(1,))
+        self._draft_step = jax.jit(self._draft_step_fn, donate_argnums=(1,))
+
+    def _draft_prefill_fn(self, params, dcache, tokens, slot):
+        """tokens [1, S] → draft cache with slot's rows 0..S-1 rewritten.
+
+        ``tokens`` is the context zero-padded up to a geometric length
+        bucket (`_draft_bucket`), so this compiles O(log max_seq) times
+        instead of once per context length. The pad tail's KV (a zero
+        continuation of the real prefix) lands at positions ≥ the real
+        context length — exactly the positions drafting rewrites before
+        any causal read can see them, the same dead-KV argument that
+        covers rejected drafts.
+        """
+        from repro.serving.kv_pager import _commit_dense_leaf
+        pre = self.draft_model.init_cache(1, tokens.shape[1])
+        pre, _, _ = self.draft_model.prefill(params, {"tokens": tokens}, pre)
+        return {seg: {"kv": {k: _commit_dense_leaf(entry["kv"][k],
+                                                   pre[seg]["kv"][k], slot)
+                             for k in entry["kv"]}}
+                for seg, entry in dcache.items()}
+
+    def _draft_bucket(self, n: int) -> int:
+        """Geometric draft-prefill length bucket covering ``n`` tokens."""
+        b = 8
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _draft_step_fn(self, params, dcache, token, pos):
+        logits, dcache = self.draft_model.decode_step(params, dcache,
+                                                      token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), dcache
+
+    def _draft_fn(self, reqs):
+        """Scheduler drafting hook: [(slot, rid, ctx, next_pos, k_eff)] →
+        {slot: draft tokens} via greedy draft-model decode."""
+        b = self.num_slots
+        for slot, rid, ctx, q, _k in reqs:
+            if self._draft_rid.get(slot) != rid:   # slot reused: re-prefill
+                padded = np.zeros(self._draft_bucket(q), np.int32)
+                padded[:q] = ctx[:q]
+                self._draft_cache = self._draft_prefill(
+                    self.draft_params, self._draft_cache,
+                    jnp.asarray(padded)[None, :], jnp.int32(slot))
+                self._draft_rid[slot] = rid
+        tok = np.zeros(b, np.int32)
+        posv = np.zeros(b, np.int32)
+        active: dict[int, int] = {}
+        for slot, _rid, ctx, q, k in reqs:
+            tok[slot] = int(ctx[-1])
+            posv[slot] = q
+            active[slot] = k
+        props: dict[int, list[int]] = {slot: [] for slot in active}
+        k_max = max(active.values())
+        for i in range(k_max + 1):
+            nxt, self._draft_cache = self._draft_step(
+                self.draft_params, self._draft_cache,
+                jnp.asarray(tok), jnp.asarray(posv))
+            nxt = np.asarray(nxt)
+            for slot, k in active.items():
+                if i < k:
+                    props[slot].append(int(nxt[slot]))
+                    tok[slot] = int(nxt[slot])
+                    posv[slot] += 1
+                # i ≥ k: frozen — the row idempotently rewrites its last
+                # draft's KV (rows of inactive slots idle at position 0,
+                # which the next per-slot prefill rewrites)
+        return props
+
     def _decode_paged_fn(self, params, cache, page_tables, token, pos,
                          temps, topks, key):
         logits, cache = self.model.decode_step(params, cache, token, pos,
@@ -298,8 +531,26 @@ class GenerationEngine:
         return min(b, pps)
 
     def _exec_run_batch(self, tokens, pos, row_slots, sample_idx, temps,
-                        topks) -> np.ndarray:
+                        topks, n_draft=None):
         tables = self._device_tables(self._context_bucket(int(pos.max())))
+        if n_draft is not None and n_draft.any():
+            # at least one verify run: the speculative step returns, per
+            # row, the leading-accept count + corrected/bonus token
+            if not temps.any() and not topks.any():
+                fix, n_acc, self._paged_cache = self._spec_greedy(
+                    self.params, self._paged_cache, tables,
+                    jnp.asarray(tokens), jnp.asarray(pos),
+                    jnp.asarray(row_slots), jnp.asarray(sample_idx),
+                    jnp.asarray(n_draft))
+            else:
+                self._key, sub = jax.random.split(self._key)
+                fix, n_acc, self._paged_cache = self._spec_sampled(
+                    self.params, self._paged_cache, tables,
+                    jnp.asarray(tokens), jnp.asarray(pos),
+                    jnp.asarray(row_slots), jnp.asarray(sample_idx),
+                    jnp.asarray(n_draft), jnp.asarray(temps),
+                    jnp.asarray(topks), sub)
+            return np.asarray(fix), np.asarray(n_acc)
         if not temps.any() and not topks.any():
             out, self._paged_cache = self._chunk_greedy(
                 self.params, self._paged_cache, tables,
@@ -312,28 +563,33 @@ class GenerationEngine:
                 jnp.asarray(tokens), jnp.asarray(pos),
                 jnp.asarray(row_slots), jnp.asarray(sample_idx),
                 jnp.asarray(temps), jnp.asarray(topks), sub)
-        return np.asarray(out)
+        out = np.asarray(out)
+        if n_draft is None:
+            return out
+        return out, np.zeros(out.shape[0], np.int32)
 
     def warmup(self, sampled: bool = False) -> int:
         """Precompile the chunked step family: every geometric context
-        bucket × {decode-only, hybrid} block widths (× the sampled
-        variant on request). All-padding dispatches only touch the
-        scratch page, so serving state is unaffected. Returns the number
-        of variants compiled; no-op on the one-shot path (its prefill
-        compiles per prompt length at admission)."""
+        bucket × every width bucket the run-length packer may pick
+        (× the speculative verify variants when spec_decode is on, × the
+        sampled variants on request). All-padding dispatches only touch
+        the scratch page, so serving state is unaffected. Returns the
+        number of variants compiled; no-op on the one-shot path (its
+        prefill compiles per prompt length at admission)."""
         if self._scheduler is None:
             self._scheduler = self._serving_init()
         if not self._scheduler.chunked:
             return 0
-        # enumerate the bucket family through _context_bucket itself so
-        # warmup can never drift from the schedule the serving loop uses
+        # enumerate the bucket families through _context_bucket and the
+        # scheduler's width_family itself, so warmup can never drift from
+        # the schedule the serving loop uses
         buckets = {self._context_bucket(p)
                    for p in range(0, self.max_seq, self.page_size)}
         b = self.num_slots
         n = 0
         for nb in sorted(buckets):
             tables = self._device_tables(nb)
-            for c in sorted({1, self.prefill_chunk}):
+            for c in self._scheduler.width_buckets:
                 args = (jnp.zeros((b, c), jnp.int32),
                         jnp.full((b, c), -1, jnp.int32),
                         jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32))
@@ -344,6 +600,19 @@ class GenerationEngine:
                     self._key, sub = jax.random.split(self._key)
                     _, self._paged_cache = self._chunk_sampled(
                         self.params, self._paged_cache, tables, *args,
+                        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
+                        sub)
+                    n += 1
+                if self.spec_decode is None or c < 2:
+                    continue        # a width-1 row can never carry a draft
+                nd = jnp.zeros(b, jnp.int32)
+                _, _, self._paged_cache = self._spec_greedy(
+                    self.params, self._paged_cache, tables, *args, nd)
+                n += 1
+                if sampled:
+                    self._key, sub = jax.random.split(self._key)
+                    _, _, self._paged_cache = self._spec_sampled(
+                        self.params, self._paged_cache, tables, *args, nd,
                         jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
                         sub)
                     n += 1

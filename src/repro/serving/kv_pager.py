@@ -54,6 +54,20 @@ Chunked prefill (incremental commit):
   * `register_prefix` runs on the final chunk, once the whole prompt is
     resident.
 
+Speculative-decode rollback (`truncate`):
+
+  * a verify run writes k + 1 tokens of KV ahead of the sampled stream;
+    when the target model rejects a draft suffix, `truncate(slot,
+    new_len)` rewinds the slot's KV watermark, returns now-empty pages to
+    the free list, and re-credits them to the slot's decode reservation
+    (so a rolled-back slot can always re-extend to its admitted worst
+    case). Aliased, pinned, or prefix-indexed pages are never rolled
+    back — rollback targets sit at decode positions past the prompt, and
+    the guards make that an invariant. Rejected-draft KV left between the
+    new watermark and the old one is dead by construction: reads are
+    causally masked to positions ≤ the query position, and the next
+    accepted token rewrites its position before anything reads it.
+
 Cross-burst prefix pinning: `pin_prefix(prefix_id)` takes a refcount on
 every page indexed under that namespace (and on pages registered under
 it later), so a hot prefix survives its last owning request and the next
@@ -262,7 +276,17 @@ class KVPager:
         return len(pages)
 
     def _release_page(self, pg: int) -> None:
-        """Drop one refcount; free the page (and its index entry) at 0."""
+        """Drop one refcount; free the page (and its index entry) at 0.
+
+        The underflow check runs BEFORE any mutation: a double-free (or a
+        release of a never-allocated page) raises without pushing the page
+        onto the free list a second time, so the free list can never hold
+        duplicates that would later alias two slots to one physical page.
+        """
+        if self.page_ref[pg] <= 0:
+            raise RuntimeError(
+                f"page {pg} refcount underflow (double free?): "
+                f"ref={int(self.page_ref[pg])}")
         self.page_ref[pg] -= 1
         if self.page_ref[pg] == 0:
             self.free_pages.append(pg)
@@ -270,8 +294,6 @@ class KVPager:
             if key is not None:
                 self.prefix_index.pop(key, None)
             self._page_ns.pop(pg, None)
-        elif self.page_ref[pg] < 0:
-            raise RuntimeError(f"page {pg} double-freed")
 
     def alloc_slot(self, prompt_len: int, max_new_tokens: int,
                    shared_pages: list[int] | None = None
@@ -359,10 +381,71 @@ class KVPager:
             self._reserved -= 1
         self.slot_len[slot] = max(int(self.slot_len[slot]), new_len)
 
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Rewind ``slot``'s KV watermark to ``new_len`` tokens (KV
+        rollback for rejected speculative drafts).
+
+        Pages that become wholly empty return to the free list and rejoin
+        the slot's decode reservation (the pages were drawn from it by
+        `extend`, so admission accounting stays exact: a rolled-back slot
+        can always re-extend to its admitted worst case). Returns the
+        number of pages released.
+
+        Guards — each raises `PageAllocationError` without mutating
+        anything, because a partial rollback would corrupt the free list
+        or shared state:
+
+          * the slot must be active and ``new_len`` must not grow it;
+          * rollback below the committed prompt is refused (speculative
+            tokens only ever live at decode positions ≥ prompt length);
+          * aliased/pinned shared-prefix pages are never rolled back: a
+            page with other owners (refcount > 1) or a live prefix-index
+            entry stays put (free-exactly-once is preserved — in practice
+            such pages sit below the prompt watermark and are unreachable
+            here; the guard makes that an invariant, not an accident).
+        """
+        if slot not in self.slot_pages:
+            raise PageAllocationError(f"truncate of inactive slot {slot}")
+        cur = int(self.slot_len[slot])
+        if new_len > cur:
+            raise PageAllocationError(
+                f"slot {slot}: truncate to {new_len} > current {cur}")
+        if new_len < max(self.slot_committed.get(slot, 0), 1):
+            raise PageAllocationError(
+                f"slot {slot}: truncate to {new_len} below the committed "
+                f"prompt watermark {self.slot_committed.get(slot, 0)}")
+        pages = self.slot_pages[slot]
+        keep = self.pages_for(new_len)
+        for pg in pages[keep:]:      # validate BEFORE mutating any state
+            if self.page_ref[pg] != 1:
+                raise PageAllocationError(
+                    f"slot {slot}: page {pg} has {int(self.page_ref[pg])} "
+                    f"owners — aliased/pinned pages are never rolled back")
+            if pg in self._page_key:
+                raise PageAllocationError(
+                    f"slot {slot}: page {pg} is prefix-indexed — "
+                    f"registered pages are never rolled back")
+        released = 0
+        while len(pages) > keep:
+            pg = pages.pop()
+            self._release_page(pg)
+            self.page_tables[slot, len(pages)] = 0
+            self.slot_reserved[slot] += 1
+            self._reserved += 1
+            released += 1
+        if released:
+            self.version += 1
+        self.slot_len[slot] = new_len
+        return released
+
     def free_slot(self, slot: int) -> None:
         """Release a finished request: refcount-- on every mapped page; a
         page returns to the free list exactly once, when its last owner
-        (request or pin) lets go (its prefix-index entry dies with it)."""
+        (request or pin) lets go (its prefix-index entry dies with it).
+        Freeing a slot that is not active (double free) raises."""
+        if slot not in self.slot_pages:
+            raise PageAllocationError(
+                f"free of inactive slot {slot} (double free?)")
         for pg in self.slot_pages.pop(slot):
             self._release_page(pg)
         self._reserved -= self.slot_reserved.pop(slot, 0)

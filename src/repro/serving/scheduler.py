@@ -4,24 +4,37 @@ Two execution models over the same admission/eviction machinery:
 
   * **chunked (token-budget) scheduling** — the default serving path for
     pure paged-attention archs. Every `step()` issues ONE fixed-shape
-    dispatch of ``num_slots × chunk_size`` token positions: each
-    decoding slot contributes one row (its decode token), the remaining
-    rows are packed with **prefill chunks** from prefilling slots in
-    admission order (a lone long prompt drains the whole idle budget),
-    and unused positions are padded (``pos = -1``). A long prompt no
-    longer monopolizes the engine (the convoy effect): its chunks
-    interleave with everyone else's decode tokens, and the first token
-    is sampled in the same dispatch whose chunk commits the last prompt
-    token. Aliased shared-prefix pages seed the commit watermark at
-    admission, so their tokens are **never recomputed** — prefix sharing
-    saves prefill FLOPs, not just memory. Steps with no prefilling slot
-    narrow to ``c = 1``, so steady-state decode pays zero padding; the
-    compiled family is {decode-only, hybrid} × O(log) context buckets,
-    killing the jit-per-prompt-length family.
+    dispatch of ``num_slots × c`` token positions, where each row is one
+    slot's **token run**: a single decode token, a speculative
+    draft/verify run of up to ``spec_k + 1`` tokens, or a prefill chunk
+    (a lone long prompt drains the whole idle budget across several
+    rows). Rows declare their true run length and ``c`` is the smallest
+    width bucket covering the longest run this step — a decode row is no
+    longer padded to the prefill chunk width when only a short tail
+    chunk (or nothing) is prefilling, and steps with only plain decode
+    rows narrow to ``c = 1`` (zero padding in steady state). The first
+    token is sampled in the same dispatch whose chunk commits the last
+    prompt token; aliased shared-prefix pages seed the commit watermark
+    at admission, so their tokens are **never recomputed**. The compiled
+    family stays bounded: O(log chunk) width buckets × O(log) context
+    buckets, killing the jit-per-prompt-length family.
   * **one-shot scheduling** (legacy) — per-request prefill fused with
     page commit and first-token sampling at admission, single-token
     decode over all slots. Still required for archs with bounded
     sequential per-slot state (sliding-window rings, SSM, MLA).
+
+Speculative decoding (chunked mode only) rides the token-run
+generalization: a drafter proposes up to ``spec_k`` tokens per decoding
+slot — either the built-in **n-gram prompt-lookup self-drafter** (the
+slot's own context predicts its continuation; no second model) or an
+engine-supplied ``draft_fn`` (small draft model) — and the slot's row
+becomes ``[last_token, d_1, …, d_k]`` at consecutive positions. The
+same unified dispatch verifies all drafts in one weight pass (the
+verify row is just a multi-token decode row), the executor returns how
+many leading drafts the target distribution accepted plus one
+corrected/bonus token (standard acceptance sampling — exactly
+token-identical to sequential decode under greedy), and rejected
+suffixes roll the KV watermark back via `KVPager.truncate`.
 
 Shared across both: FIFO admission when a slot is free and the pager can
 cover the request's worst-case KV footprint; EOS/budget eviction with
@@ -41,6 +54,59 @@ from typing import Callable
 import numpy as np
 
 from repro.serving.kv_pager import KVPager
+
+
+def ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3,
+                  min_n: int = 1, window: int = 512) -> list[int]:
+    """Prompt-lookup drafting: continue ``ctx`` by matching its suffix.
+
+    Finds the longest suffix n-gram (``max_n`` down to ``min_n``) that
+    occurred earlier in ``ctx`` and proposes up to ``k`` tokens that
+    followed its most recent earlier occurrence. Returns ``[]`` when
+    nothing matches — the slot falls back to plain single-token decode.
+    This is the self-drafting mode: repetitive text (code, templated
+    chat, lists) drafts itself with no second model.
+
+    The match scans only the trailing ``window`` tokens, so per-step
+    drafting cost is O(window), not O(context) — long streams don't turn
+    the host-side drafter into a quadratic scan (recent context is also
+    where the predictive repetition lives).
+    """
+    ctx = np.asarray(ctx)
+    if window and len(ctx) > window:
+        ctx = ctx[-window:]
+    ln = len(ctx)
+    for n in range(min(max_n, ln - 1), min_n - 1, -1):
+        tail = ctx[ln - n:]
+        # windows over ctx[:-1]: every match has at least one continuation
+        # token, and the suffix itself (start ln - n) is never a candidate
+        win = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+        hits = np.nonzero((win == tail).all(axis=1))[0]
+        if len(hits):
+            start = int(hits[-1]) + n          # most recent occurrence
+            cont = ctx[start:start + k]
+            if cont.size:
+                return [int(t) for t in cont]
+    return []
+
+
+def width_family(chunk_size: int, spec_k: int = 0) -> list[int]:
+    """Column-width buckets the token-budget packer may dispatch.
+
+    Powers of two up to ``chunk_size`` (plus ``chunk_size`` itself and,
+    under speculative decoding, the verify-run width ``spec_k + 1``), so
+    the compiled-step family stays O(log chunk) wide while rows are
+    padded only to the smallest bucket covering the step's longest
+    declared run — not unconditionally to the prefill chunk width.
+    """
+    widths = {1, chunk_size}
+    w = 2
+    while w < chunk_size:
+        widths.add(w)
+        w *= 2
+    if spec_k:
+        widths.add(spec_k + 1)
+    return sorted(widths)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +159,33 @@ class SchedulerStats:
     prefill_chunks: int = 0       # prompt chunks dispatched (chunked mode)
     prefill_tokens: int = 0       # prompt tokens run through the model
     prefill_tokens_skipped: int = 0   # aliased prompt tokens never re-run
+    # --- speculative decoding -------------------------------------------
+    spec_rows: int = 0            # draft/verify runs dispatched
+    draft_tokens: int = 0         # draft tokens proposed and verified
+    accepted_tokens: int = 0      # draft tokens the target accepted
+    rollbacks: int = 0            # verify runs that truncated the KV
+    rollback_pages: int = 0       # pages returned to the free list by them
+    # --- token-budget packing accounting --------------------------------
+    dispatched_positions: int = 0     # num_slots × c summed over steps
+    padded_positions: int = 0         # dispatched positions holding padding
+    padded_positions_fixed: int = 0   # what padding the pre-run-length
+    #                                   policy (c = chunk_size whenever
+    #                                   anything prefills) would have paid
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    @property
+    def spec_tokens_per_row(self) -> float:
+        """Mean tokens emitted per draft/verify run (accepted + the
+        corrected/bonus token); 1.0 means drafting never helped."""
+        return (self.accepted_tokens + self.spec_rows) / max(self.spec_rows,
+                                                             1)
+
+    @property
+    def padding_waste(self) -> float:
+        return self.padded_positions / max(self.dispatched_positions, 1)
 
 
 class Scheduler:
@@ -107,15 +200,34 @@ class Scheduler:
         the paged cache (row b reads/writes slot ``row_slots[b]``'s
         pages) and returns, per row, the token sampled at ``sample_idx``
         (consumed only for rows that finished their prompt or decoded).
+        Under speculative decoding the call carries an extra keyword
+        ``n_draft [B]`` (draft tokens per row — the run is
+        ``tokens[b, sample_idx[b] : sample_idx[b] + 1 + n_draft[b]]``)
+        and must return ``(fix_tok [B], n_acc [B])``: the leading-accept
+        count against the target distribution and the corrected (on
+        rejection) or bonus (on full acceptance) token sampled at index
+        ``n_acc``. Rows with ``n_draft == 0`` degenerate to the plain
+        contract (``n_acc = 0``, ``fix_tok`` = the sampled token).
       * prefill_commit(request, slot, pages, n_shared) → first token;
         decode(page_tables, token, pos, temps, topks) → next tokens.
+
+    ``spec_decode``: ``None`` (off), ``"ngram"`` (built-in prompt-lookup
+    self-drafter), or ``"draft_fn"`` with a ``draft_fn`` callable
+    ``[(slot, rid, ctx, next_pos, k_eff)] → {slot: [tokens]}`` (the
+    engine's draft-model hook, or a custom drafter in tests). Draft
+    length is capped per slot at ``min(spec_k, budget_left - 1)`` so a
+    verify run can never write KV past the slot's admitted reservation.
     """
 
     def __init__(self, pager: KVPager, *,
                  prefill_commit: Callable | None = None,
                  decode: Callable | None = None,
                  run_batch: Callable | None = None,
-                 chunk_size: int = 16):
+                 chunk_size: int = 16,
+                 spec_decode: str | None = None,
+                 spec_k: int = 4,
+                 draft_fn: Callable | None = None,
+                 ngram_max: int = 3):
         self.pager = pager
         self.num_slots = pager.cfg.num_slots
         self.chunked = run_batch is not None
@@ -125,10 +237,26 @@ class Scheduler:
         elif prefill_commit is None or decode is None:
             raise ValueError("need run_batch (chunked) or "
                              "prefill_commit + decode (one-shot)")
+        if spec_decode not in (None, "ngram", "draft_fn"):
+            raise ValueError(f"unknown spec_decode {spec_decode!r}")
+        if spec_decode is not None:
+            if not self.chunked:
+                raise ValueError("speculative decoding requires the "
+                                 "chunked (token-budget) execution path")
+            if spec_k < 1:
+                raise ValueError("spec_k must be ≥ 1")
+            if spec_decode == "draft_fn" and draft_fn is None:
+                raise ValueError("spec_decode='draft_fn' needs a draft_fn")
         self._run_batch = run_batch
         self._prefill_commit = prefill_commit
         self._decode = decode
         self.chunk_size = chunk_size
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self._draft_fn = draft_fn
+        self.ngram_max = ngram_max
+        self.width_buckets = width_family(
+            chunk_size, spec_k if spec_decode is not None else 0)
         self.queue: deque[Request] = deque()
         self.slots: dict[int, _SlotState] = {}
         self.finished: dict[int, np.ndarray] = {}
@@ -231,42 +359,108 @@ class Scheduler:
             if st.done:
                 self._finish(slot)
 
+    # ---------------------------------------------------- speculative drafts
+    def _propose_drafts(self) -> dict[int, list[int]]:
+        """Per decoding slot, up to ``spec_k`` draft tokens for this step.
+
+        Draft length is capped at the slot's remaining budget minus one
+        (the corrected/bonus token), so a verify run never writes KV past
+        position ``prompt + max_new − 2`` — inside the reservation
+        `alloc_slot` already holds, which is what keeps `extend` for
+        verify runs infallible. Empty proposals fall back to plain
+        decode rows.
+        """
+        out: dict[int, list[int]] = {}
+        reqs: list[tuple[int, int, np.ndarray, int, int]] = []
+        caps: dict[int, int] = {}
+        for slot, st in self.slots.items():
+            if st.prefilling:
+                continue
+            r = st.request
+            k_eff = min(self.spec_k, r.max_new_tokens - len(st.generated) - 1)
+            if k_eff <= 0:
+                continue
+            ctx = np.concatenate([r.tokens,
+                                  np.asarray(st.generated, np.int32)])
+            if self.spec_decode == "ngram":
+                prop = ngram_propose(ctx, k_eff, self.ngram_max)
+                if prop:
+                    out[slot] = prop
+            else:
+                reqs.append((slot, r.rid, ctx, st.next_pos, k_eff))
+                caps[slot] = k_eff
+        if reqs:
+            for slot, prop in (self._draft_fn(reqs) or {}).items():
+                prop = [int(t) for t in prop][: caps.get(slot, 0)]
+                if prop:
+                    out[slot] = prop
+        return out
+
     # ------------------------------------------- chunked (token-budget) step
     def _step_chunked(self, events: list[tuple[int, int]]) -> None:
-        """One fixed-shape dispatch packing prefill chunks + decode tokens.
+        """One fixed-shape dispatch packing prefill chunks + token runs.
 
         The dispatch is a ``[num_slots, c]`` token block — the step's
-        token budget. Each decoding slot takes one row (its single decode
-        token); the remaining rows are handed to prefilling slots in
-        admission order as consecutive fixed-size chunks, so a lone long
-        prompt drains the whole idle budget instead of one chunk per
-        step. Rows carry their slot in ``row_slots`` (the executor
-        gathers that slot's page-table row per dispatch row). When no
-        slot is prefilling the block narrows to ``c = 1`` — steady-state
-        decode pays zero padding, and the compiled-variant family stays
-        at {decode-only, hybrid} × context buckets.
+        token budget. Each decoding slot takes one row holding its token
+        run (the single decode token, or ``[last, d_1 … d_k]`` for a
+        speculative verify run at consecutive positions); the remaining
+        rows are handed to prefilling slots in admission order as
+        consecutive chunks, so a lone long prompt drains the whole idle
+        budget instead of one chunk per step. Rows carry their slot in
+        ``row_slots`` (the executor gathers that slot's page-table row
+        per dispatch row).
+
+        Every row declares its true run length and ``c`` is the smallest
+        width bucket covering the longest one (a prefilling slot wants
+        ``min(chunk_size, remaining)``) — decode rows are no longer
+        padded to the prefill chunk width when only a short tail chunk
+        is in flight, and pure-decode steps narrow to ``c = 1`` (or the
+        verify-run bucket). The compiled-variant family stays bounded at
+        `width_family` × context buckets.
         """
         b = self.num_slots
         prefilling = [s for s, st in self.slots.items() if st.prefilling]
-        c = self.chunk_size if prefilling else 1
+        drafts = self._propose_drafts() if self.spec_decode is not None \
+            else {}
+        want = 1
+        for slot, st in self.slots.items():
+            if not st.prefilling:
+                want = max(want, 1 + len(drafts.get(slot, ())))
+        if prefilling:
+            want = max(want, max(
+                min(self.chunk_size,
+                    len(self.slots[s].request.tokens)
+                    - self.slots[s].committed) for s in prefilling))
+        c = next(w for w in self.width_buckets if w >= want)
         tokens = np.zeros((b, c), np.int32)
         pos = np.full((b, c), -1, np.int32)
         row_slots = np.zeros(b, np.int32)
         temps = np.zeros(b, np.float32)
         topks = np.zeros(b, np.int32)
         sample_idx = np.zeros(b, np.int32)
+        n_draft = np.zeros(b, np.int32)
         sample_row: dict[int, int] = {}       # slot → row holding its sample
         chunk_tok: dict[int, int] = {}        # slot → prompt tokens this step
+        run_q: dict[int, int] = {}            # slot → base pos of its run
+        row_draft: dict[int, list[int]] = {}  # slot → drafts in its run
         row = 0
-        for slot, st in self.slots.items():   # decode rows first
+        for slot, st in self.slots.items():   # decode/verify rows first
             if st.prefilling:
                 continue
             r = st.request
+            d = drafts.get(slot, [])
+            n = 1 + len(d)
+            q = st.next_pos
             tokens[row, 0] = st.generated[-1]
-            pos[row, 0] = st.next_pos
+            if d:
+                tokens[row, 1:n] = d
+            pos[row, :n] = np.arange(q, q + n)
             row_slots[row] = slot
-            self.pager.extend(slot, st.next_pos + 1)
+            self.pager.extend(slot, q + n)
             sample_row[slot] = row
+            run_q[slot] = q
+            row_draft[slot] = d
+            n_draft[row] = len(d)
             temps[row] = r.temperature
             topks[row] = r.top_k
             row += 1
@@ -293,8 +487,19 @@ class Scheduler:
                 row += 1
             self.pager.commit_chunk(slot, start, start + take)
             chunk_tok[slot] = take
-        sampled = self._run_batch(tokens, pos, row_slots, sample_idx,
-                                  temps, topks)
+        valid = int((pos >= 0).sum())
+        c_fixed = max(c, self.chunk_size) if prefilling else c
+        self.stats.dispatched_positions += b * c
+        self.stats.padded_positions += b * c - valid
+        self.stats.padded_positions_fixed += b * c_fixed - valid
+        if self.spec_decode is None:
+            sampled = self._run_batch(tokens, pos, row_slots, sample_idx,
+                                      temps, topks)
+            fix_tok, n_acc = sampled, np.zeros(b, np.int32)
+        else:
+            fix_tok, n_acc = self._run_batch(tokens, pos, row_slots,
+                                             sample_idx, temps, topks,
+                                             n_draft=n_draft)
         self.stats.decode_steps += 1
         self.stats.slot_steps += b
         for slot in list(self.slots):
@@ -310,13 +515,36 @@ class Scheduler:
                 # register on the final chunk: the whole prompt is resident
                 self.pager.register_prefix(slot, st.request.tokens,
                                            st.request.prefix_id)
-            tok = int(sampled[row])
-            st.generated.append(tok)
-            if not first:
+            if first:
+                tok = int(fix_tok[row])
+                st.generated.append(tok)
+                events.append((st.request.rid, tok))
+                if st.done:
+                    self._finish(slot)
+                continue
+            # decode / verify row: emit the accepted draft prefix plus the
+            # corrected (rejection) or bonus (full-acceptance) token,
+            # stopping at EOS / budget mid-run
+            d = row_draft.get(slot, [])
+            na = min(int(n_acc[row]), len(d))
+            for tok in d[:na] + [int(fix_tok[row])]:
+                st.generated.append(tok)
+                events.append((st.request.rid, tok))
                 self.stats.slot_tokens += 1
-            events.append((st.request.rid, tok))
+                if st.done:
+                    break
+            if d:
+                self.stats.spec_rows += 1
+                self.stats.draft_tokens += len(d)
+                self.stats.accepted_tokens += na
             if st.done:
                 self._finish(slot)
+            elif na < len(d):
+                # rejected suffix: roll the KV watermark (and any pages
+                # drawn for it) back so the cache matches the stream
+                self.stats.rollbacks += 1
+                self.stats.rollback_pages += self.pager.truncate(
+                    slot, run_q[slot] + na + 1)
 
     # ------------------------------------------------- one-shot decode step
     def _decode_once(self, events: list[tuple[int, int]]) -> None:

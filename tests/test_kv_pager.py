@@ -72,6 +72,70 @@ def test_extend_cannot_outgrow_reservation():
         p.extend(slot, 5)
 
 
+def test_truncate_releases_pages_back_to_reservation():
+    p = _pager(page_size=4)
+    slot, pages = p.alloc_slot(prompt_len=6, max_new_tokens=8)
+    # 6+8-1 = 13 tokens → 4 pages total, 2 drawn now, 2 reserved
+    assert p.slot_reserved[slot] == 2
+    p.extend(slot, 11)                      # verify run crossed a boundary
+    assert p.pages_in_use == 3 and p.slot_reserved[slot] == 1
+    released = p.truncate(slot, 8)          # rejected drafts → roll back
+    assert released == 1
+    assert p.pages_in_use == 2
+    assert p.slot_reserved[slot] == 2       # page returned to the reserve
+    assert int(p.slot_len[slot]) == 8
+    assert p.page_tables[slot, 2] == 0      # table entry back to scratch
+    p.extend(slot, 13)                      # rollback never blocks re-extend
+    assert p.pages_in_use == 4
+    p.free_slot(slot)
+    assert p.pages_in_use == 0 and p.num_free_pages == 16
+
+
+def test_truncate_within_page_keeps_mapping():
+    p = _pager(page_size=4)
+    slot, _ = p.alloc_slot(prompt_len=5, max_new_tokens=4)
+    p.extend(slot, 7)
+    assert p.truncate(slot, 6) == 0         # same page: nothing released
+    assert int(p.slot_len[slot]) == 6
+    p.free_slot(slot)
+
+
+def test_truncate_guards():
+    p = _pager(page_size=4)
+    slot, _ = p.alloc_slot(prompt_len=6, max_new_tokens=6)
+    p.slot_committed[slot] = 6              # prompt fully resident
+    with pytest.raises(PageAllocationError):
+        p.truncate(slot, 5)                 # below the prompt watermark
+    with pytest.raises(PageAllocationError):
+        p.truncate(slot, 99)                # growth is not a truncation
+    with pytest.raises(PageAllocationError):
+        p.truncate(slot + 1, 4)             # inactive slot
+    # aliased/pinned pages are never rolled back: simulate a second owner
+    # on the tail page (a pin) and ask for a rollback that would free it
+    p.extend(slot, 11)                      # draws the 3rd page
+    tail = p.slot_pages[slot][-1]
+    p.page_ref[tail] += 1
+    with pytest.raises(PageAllocationError):
+        p.truncate(slot, 8)
+    assert int(p.slot_len[slot]) == 11      # guard fired before mutation
+    p.page_ref[tail] -= 1
+    assert p.truncate(slot, 8) == 1
+
+
+def test_double_free_and_underflow_raise():
+    p = _pager()
+    slot, pages = p.alloc_slot(prompt_len=4, max_new_tokens=1)
+    p.free_slot(slot)
+    before = (len(p.free_pages), len(set(p.free_pages)))
+    with pytest.raises(PageAllocationError):
+        p.free_slot(slot)                   # double free of the slot
+    with pytest.raises(RuntimeError):
+        p._release_page(pages[0])           # refcount underflow
+    # the failed frees never pushed a duplicate onto the free list
+    assert (len(p.free_pages), len(set(p.free_pages))) == before
+    assert len(p.free_pages) == len(set(p.free_pages))
+
+
 def test_commit_scatter_matches_logical_order():
     """Gather(commit(dense)) reproduces the dense sequence, incl. partial
     last page."""

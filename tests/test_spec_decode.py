@@ -1,0 +1,443 @@
+"""Speculative decoding through the unified chunk dispatch: greedy
+token identity vs sequential generate() across draft lengths and
+acceptance outcomes, KV rollback across page boundaries, drafter modes
+(n-gram prompt lookup, draft model, custom draft_fn), scheduler
+state-machine semantics against a fake executor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+from repro.serving import GenerationEngine, SamplerConfig
+from repro.serving.kv_pager import KVPager, PagerConfig
+from repro.serving.scheduler import Request, Scheduler, ngram_propose
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(m, params, **kw):
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("page_size", 8)
+    return GenerationEngine(m, params, **kw)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+def _refs(eng, prompts, max_new):
+    return [np.asarray(eng.generate({"tokens": jnp.asarray(p)[None, :]},
+                                    max_new)[0]) for p in prompts]
+
+
+def _pager_invariants(pager):
+    """Free-exactly-once bookkeeping: every non-scratch page is either on
+    the free list or owned (refcount ≥ 1), never both, never neither."""
+    free = set(pager.free_pages)
+    assert len(free) == len(pager.free_pages)          # no duplicates
+    for pg in range(1, pager.cfg.num_pages):
+        if pg in free:
+            assert pager.page_ref[pg] == 0, pg
+        else:
+            assert pager.page_ref[pg] >= 1, pg
+    assert pager.pages_in_use == pager.cfg.num_pages - 1 - len(free)
+
+
+# ---------------------------------------------------------------------------
+# n-gram prompt-lookup drafter (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_ngram_propose_matches_most_recent_occurrence():
+    ctx = np.array([5, 6, 7, 9, 5, 6, 8, 3, 5, 6], np.int32)
+    # suffix [5, 6] last occurred at index 4 → continuation [8, 3, 5, 6]
+    assert ngram_propose(ctx, 4, max_n=3) == [8, 3, 5, 6]
+    assert ngram_propose(ctx, 2, max_n=3) == [8, 3]
+    # longer n-grams win: suffix [3, 5, 6] has no earlier occurrence, but
+    # with max_n=1 the last [6] at index 5 proposes [8, ...]
+    assert ngram_propose(ctx, 1, max_n=1) == [8]
+
+
+def test_ngram_propose_no_match_and_tiny_context():
+    assert ngram_propose(np.array([1, 2, 3, 4], np.int32), 4) == []
+    assert ngram_propose(np.array([7], np.int32), 4) == []
+    assert ngram_propose(np.array([7, 7], np.int32), 2) == [7]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler state machine against a fake executor (no model)
+# ---------------------------------------------------------------------------
+
+class _FakeSpecExec:
+    """Scripted verify executor: accepts a fixed number of drafts per call
+    and emits deterministic tokens (fix = 100 + base token + accepted)."""
+
+    def __init__(self, accept):
+        self.accept = accept           # drafts to accept per verify row
+        self.calls = []                # (c, n_draft tuple)
+
+    def run_batch(self, tokens, pos, row_slots, sample_idx, temps, topks,
+                  n_draft=None):
+        if n_draft is None:
+            out = np.array([100 + tokens[r, sample_idx[r]]
+                            for r in range(tokens.shape[0])], np.int32)
+            return out
+        self.calls.append((tokens.shape[1], tuple(int(x) for x in n_draft)))
+        n_acc = np.minimum(n_draft, self.accept).astype(np.int32)
+        fix = np.array([100 + tokens[r, sample_idx[r]] + n_acc[r]
+                        for r in range(tokens.shape[0])], np.int32)
+        return fix, n_acc
+
+
+def _spec_sched(draft, accept, num_slots=2, pages_per_slot=4, page_size=4,
+                chunk=4, k=3):
+    ex = _FakeSpecExec(accept)
+    pager = KVPager(PagerConfig(num_pages=num_slots * pages_per_slot + 1,
+                                page_size=page_size, num_slots=num_slots,
+                                pages_per_slot=pages_per_slot))
+    sched = Scheduler(pager, run_batch=ex.run_batch, chunk_size=chunk,
+                      spec_decode="draft_fn", spec_k=k,
+                      draft_fn=draft)
+    return sched, ex
+
+
+def test_fake_spec_acceptance_emits_run_and_rolls_back():
+    drafts = {"calls": 0}
+
+    def draft(reqs):
+        drafts["calls"] += 1
+        return {slot: [7, 8, 9][:k] for slot, _rid, _ctx, _q, k in reqs}
+
+    sched, ex = _spec_sched(draft, accept=1)   # always accept 1 of 3
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=7))
+    sched.step()                               # prefill → first token
+    ev = sched.step()                          # verify run: accept 1 + fix
+    assert len(ev) == 2 and ev[0][1] == 7      # accepted draft, then fix
+    assert sched.stats.spec_rows == 1
+    assert sched.stats.draft_tokens == 3 and sched.stats.accepted_tokens == 1
+    assert sched.stats.rollbacks == 1          # 2 rejected → truncate
+    # KV watermark matches the sampled stream: prompt 4 + first + run 2
+    assert int(sched.pager.slot_len[0]) == 4 + 2
+    out = sched.run()
+    assert len(out[0]) == 7
+    assert sched.pager.pages_in_use == 0
+    _pager_invariants(sched.pager)
+
+
+def test_fake_spec_draft_cap_near_budget_end():
+    """k_eff shrinks to the remaining budget minus one, so a verify run
+    never writes KV past the admitted reservation and the stream never
+    overshoots max_new."""
+    seen = []
+
+    def draft(reqs):
+        seen.extend(k for *_rest, k in reqs)
+        return {slot: list(range(10, 10 + k))
+                for slot, _rid, _ctx, _q, k in reqs}
+
+    sched, ex = _spec_sched(draft, accept=3, k=3)
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=5))
+    out = sched.run()
+    assert len(out[0]) == 5                  # exactly the budget
+    # first verify: 4 to go → k_eff 3; after emitting 4 → 1 to go → no draft
+    assert seen == [3]
+    assert sched.pager.pages_in_use == 0
+    _pager_invariants(sched.pager)
+
+
+def test_fake_spec_full_acceptance_width_and_eos_mid_run():
+    def draft(reqs):
+        return {slot: [50, 51, 52][:k] for slot, _rid, _ctx, _q, k in reqs}
+
+    sched, ex = _spec_sched(draft, accept=3, k=3, pages_per_slot=6)
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=12, eos_id=51))
+    sched.step()
+    ev = sched.step()                          # verify: [50, 51, …] → EOS
+    assert [t for _r, t in ev] == [50, 51]     # stops mid-acceptance
+    assert sched.stats.finished == 1
+    assert ex.calls[-1][0] == 4                # verify run width k+1 = 4
+    assert sched.pager.pages_in_use == 0
+    _pager_invariants(sched.pager)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end greedy identity: spec-decode streams ≡ sequential generate()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_greedy_ngram_identity_across_k(model_and_params, k):
+    cfg, m, params = model_and_params
+    # repetitive prompts (prompt lookup fires) + random ones (it mostly
+    # falls back to plain decode) in one batch
+    rng = np.random.default_rng(2)
+    pats = [rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+            for _ in range(2)]
+    prompts = [np.tile(p, 5) for p in pats] + _prompts(cfg, (9, 13), seed=3)
+
+    eng = _engine(m, params, spec_decode="ngram", spec_k=k)
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.drain()
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+    refs = _refs(eng, prompts, 10)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref[: len(out[rid])])
+        assert len(out[rid]) == 10
+    st = eng.scheduler_stats
+    assert st.draft_tokens > 0                # the drafter actually fired
+    assert 0 <= st.accepted_tokens <= st.draft_tokens
+
+
+def test_forced_full_acceptance_oracle_draft(model_and_params):
+    """A draft_fn that proposes the true greedy continuation: everything
+    is accepted, each verify run emits k+1 tokens, streams stay
+    identical, and no rollback ever happens."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (5, 9, 12), seed=4)
+    eng0 = _engine(m, params)
+    refs = _refs(eng0, prompts, 9)
+    oracle = {}            # rid → full greedy stream
+
+    def draft(reqs):
+        out = {}
+        for slot, rid, ctx, _q, k in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen             # tokens already emitted
+            out[slot] = [int(t) for t in ref[done:done + k]]
+        return out
+
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  draft_fn=draft)
+    rids = [eng.submit(p, 9) for p in prompts]
+    for rid, p, ref in zip(rids, prompts, refs):
+        oracle[rid] = (ref, len(p))
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.accepted_tokens == st.draft_tokens > 0
+    assert st.rollbacks == 0
+    assert st.spec_tokens_per_row > 2.0
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_forced_rejection_identity_and_rollback(model_and_params):
+    """A drafter that always proposes wrong tokens: every draft is
+    rejected, every verify run rolls back, and the stream is still
+    token-identical to sequential greedy (the corrected token IS the
+    argmax)."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6, 11), seed=5)
+    eng0 = _engine(m, params)
+    refs = _refs(eng0, prompts, 8)
+    oracle = {}
+
+    def draft(reqs):
+        out = {}
+        for slot, rid, ctx, _q, k in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen
+            nxt = [int(t) for t in ref[done:done + k]]
+            out[slot] = [(t + 1) % cfg.vocab_size for t in nxt]  # all wrong
+        return out
+
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=3,
+                  draft_fn=draft)
+    rids = [eng.submit(p, 8) for p in prompts]
+    for rid, p, ref in zip(rids, prompts, refs):
+        oracle[rid] = (ref, len(p))
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.accepted_tokens == 0 and st.draft_tokens > 0
+    assert st.rollbacks == st.spec_rows > 0
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+
+
+def test_rollback_across_page_boundary(model_and_params):
+    """Rejected verify runs that straddle a page boundary release the
+    freshly drawn page back to the free list (and back into the slot's
+    reservation) — and the stream stays identical."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6,), seed=6)      # page 4: decode crosses pages
+    eng0 = _engine(m, params, page_size=4)
+    refs = _refs(eng0, prompts, 10)
+    oracle = {}
+
+    def draft(reqs):
+        out = {}
+        for slot, rid, ctx, _q, k in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen
+            nxt = [int(t) for t in ref[done:done + k]]
+            out[slot] = [(t + 1) % cfg.vocab_size for t in nxt]
+        return out
+
+    eng = _engine(m, params, page_size=4, spec_decode="draft_model",
+                  spec_k=6, draft_fn=draft)
+    rid = eng.submit(prompts[0], 10)
+    oracle[rid] = (refs[0], len(prompts[0]))
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.rollback_pages > 0               # pages actually came back
+    np.testing.assert_array_equal(out[rid], refs[0])
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+
+
+def test_randomized_accept_reject_pager_invariants(model_and_params):
+    """Random mix of right and wrong drafts across many requests: streams
+    stay identical and the pager's free-exactly-once bookkeeping holds
+    after every step."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (5, 8, 11, 7, 13, 4), seed=7)
+    eng0 = _engine(m, params)
+    refs = _refs(eng0, prompts, 9)
+    oracle = {}
+    rng = np.random.default_rng(8)
+
+    def draft(reqs):
+        out = {}
+        for slot, rid, ctx, _q, k in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen
+            nxt = [int(t) for t in ref[done:done + k]]
+            out[slot] = [t if rng.random() < 0.6 else
+                         (t + 1) % cfg.vocab_size for t in nxt]
+        return out
+
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  draft_fn=draft)
+    rids = [eng.submit(p, 9) for p in prompts]
+    for rid, p, ref in zip(rids, prompts, refs):
+        oracle[rid] = (ref, len(p))
+    out = {}
+    while not eng.idle:
+        eng.step()
+        _pager_invariants(eng._scheduler.pager)
+        out.update(eng.collect())
+    st = eng.scheduler_stats
+    assert 0 < st.accepted_tokens < st.draft_tokens
+    assert st.rollbacks > 0
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_draft_model_mode_self_draft_full_acceptance(model_and_params):
+    """Draft model = the target itself: greedy drafts match the target's
+    argmax chain, so (near-)everything is accepted and steps collapse —
+    with streams still identical to sequential decode."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (5, 12, 9), seed=9)
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  draft_model=m, draft_params=params)
+    rids = [eng.submit(p, 12) for p in prompts]
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.accepted_tokens == st.draft_tokens > 0
+    assert st.spec_tokens_per_row > 3.0
+    refs = _refs(eng, prompts, 12)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_spec_with_prefix_sharing(model_and_params):
+    """Speculative decode composes with prefix sharing: aliased prompt
+    pages are still skipped, never rolled back, and streams match the
+    unshared spec engine."""
+    cfg, m, params = model_and_params
+    rng = np.random.default_rng(10)
+    prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (t,)
+                                            ).astype(np.int32)])
+               for t in (4, 7, 3)]
+
+    def serve(prefix_id):
+        eng = _engine(m, params, spec_decode="ngram", spec_k=4)
+        rids = [eng.submit(p, 8, prefix_id=prefix_id) for p in prompts]
+        out = eng.drain()
+        assert eng._scheduler.pager.pages_in_use == 0
+        _pager_invariants(eng._scheduler.pager)
+        return [list(out[r]) for r in rids], eng._scheduler.stats
+
+    shared, st_s = serve("sys")
+    unshared, st_u = serve(None)
+    assert shared == unshared
+    assert st_s.prefix_shared_pages > 0
+    assert st_s.prefill_tokens_skipped > st_u.prefill_tokens_skipped == 0
+
+
+def test_spec_sampled_mixed_rows(model_and_params):
+    """Sampled rows ride the speculative dispatch: greedy rows in the
+    same batch stay token-identical to sequential greedy, hot rows finish
+    with full-length deterministic (seeded) streams."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6, 9, 7), seed=11)
+
+    def serve():
+        eng = _engine(m, params, spec_decode="ngram", spec_k=3, seed=5)
+        r_g = eng.submit(np.tile(prompts[0][:3], 4), 10,
+                         sampler=SamplerConfig(0.0))
+        r_h = eng.submit(prompts[1], 10,
+                         sampler=SamplerConfig(temperature=1.5, top_k=8))
+        r_w = eng.submit(prompts[2], 10,
+                         sampler=SamplerConfig(temperature=0.7))
+        out = eng.drain()
+        assert eng._scheduler.pager.pages_in_use == 0
+        return {"g": list(out[r_g]), "h": list(out[r_h]),
+                "w": list(out[r_w])}, eng
+
+    a, eng = serve()
+    b, _ = serve()
+    assert a == b                               # deterministic per seed
+    ref = eng.generate({"tokens": jnp.asarray(
+        np.tile(prompts[0][:3], 4))[None, :]}, 10)[0]
+    np.testing.assert_array_equal(a["g"], ref)  # greedy row unaffected
+    assert len(a["h"]) == 10 and len(a["w"]) == 10
+
+
+def test_eos_mid_acceptance_stops_stream(model_and_params):
+    """EOS inside an accepted draft run ends the request exactly there —
+    the trailing accepted/bonus tokens are dropped."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (7,), seed=12)
+    eng0 = _engine(m, params)
+    ref = _refs(eng0, prompts, 8)[0]
+    eos = int(ref[3])
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  draft_model=m, draft_params=params)
+    rid = eng.submit(prompts[0], 8, eos_id=eos)
+    out = eng.drain()
+    stream = out[rid]
+    np.testing.assert_array_equal(stream, ref[: len(stream)])
+    assert int(stream[-1]) == eos
+    assert list(stream).index(eos) == len(stream) - 1
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_spec_requires_chunked_path(model_and_params):
+    cfg, m, params = model_and_params
+    eng = _engine(m, params, spec_decode="ngram", chunked_prefill=False)
+    with pytest.raises(ValueError, match="chunked"):
+        eng.submit(np.arange(4, dtype=np.int32), 4)
+    with pytest.raises(ValueError, match="spec_decode"):
+        _engine(m, params, spec_decode="medusa")
+    with pytest.raises(ValueError, match="draft_model"):
+        _engine(m, params, spec_decode="draft_model")

@@ -50,6 +50,20 @@ Scenario sections:
     bucket covering the step; reported as the padding-waste % of
     dispatched positions, next to what the old fixed-chunk-width policy
     would have paid on the same steps.
+  * **mesh-sharded serving** — the full feature stack (chunked + int8 +
+    prefix sharing + ngram spec) through ``GenerationEngine(mesh=...)``
+    for every ``model``-axis size the host's devices allow: greedy
+    streams must stay token-identical to the unsharded engine, and
+    per-device peak page-pool bytes must shrink ~linearly with the axis
+    (pools stripe over KV heads; page tables and the pager replicate).
+    With one local device only the degenerate size-1 mesh runs — force
+    more with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``.
+
+All metrics come from the engine's public `stats()` snapshot — the bench
+never reaches into scheduler or pager internals. Every **asserted
+identity section** registers itself in ``identity_sections``; the run
+exits non-zero if any registered-expected section is missing or False,
+so the smoke gate cannot silently pass while covering nothing.
 
 Runs end-to-end on CPU at smoke scale (pure JAX path; no TPU kernels).
 ``--smoke`` runs a reduced version as the tier-1 end-to-end gate.
@@ -57,14 +71,24 @@ Runs end-to-end on CPU at smoke scale (pure JAX path; no TPU kernels).
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import sys
 import time
 
 import jax
 import numpy as np
 
 import repro.configs as C
+from repro.distributed import serving_mesh
 from repro.models import build_model
 from repro.serving import GenerationEngine
+
+# identity sections the gate requires: each section sets its key to the
+# asserted comparison's outcome only after ACTUALLY running it — a
+# section that is skipped (or crashes) leaves its key missing, and
+# `main` exits non-zero either way
+REQUIRED_IDENTITY = ("chunked_vs_oneshot_vs_generate", "spec_vs_plain",
+                     "sharded_vs_unsharded")
 
 NUM_REQUESTS = 16
 NUM_SLOTS = 4
@@ -167,8 +191,7 @@ def run_continuous(eng, workload, prefix_id=None):
             # so a follower queued behind it matches the real page count
             eng.submit(workload[1][1], 2, prefix_id=prefix_id)
     eng.drain()
-    sched = eng._scheduler
-    sched.stats = type(sched.stats)()   # timed run reports clean stats
+    eng.reset_stats()                   # timed run reports clean stats
     pending = sorted(enumerate(workload), key=lambda r: r[1][0])
     finish: dict[int, float] = {}
     first: dict[int, float] = {}
@@ -207,7 +230,7 @@ def run_continuous(eng, workload, prefix_id=None):
             "latencies": [finish[r] - arrival_of[r] for r in sorted(finish)],
             "ttfts": [first[r] - arrival_of[r] for r in sorted(first)],
             "itl_max": [itl_max.get(r, 0.0) for r in sorted(finish)],
-            "steps": eng.scheduler_stats.decode_steps, "dt": dt}
+            "steps": eng.stats().dispatches, "dt": dt}
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +370,7 @@ def run_prefix_sharing(m, params, csv_rows, prefix_len=PREFIX_LEN,
         eng = _fresh_engine(m, params, max_seq=max_seq,
                             num_slots=num_requests, **kw)
         r = run_continuous(eng, wl, prefix_id=prefix_id)
-        st = eng.scheduler_stats
+        st = eng.stats()
         return {"tps": r["useful"] / r["dt"],
                 "ttft_p95": float(np.percentile(r["ttfts"], 95)),
                 "prefill_tokens": st.prefill_tokens,
@@ -399,8 +422,9 @@ def make_repetitive_workload(cfg, seed=6, num_requests=8, pat_len=4,
     return reqs
 
 
-def run_spec(m, params, csv_rows, num_requests=8, new_tokens=SPEC_NEW_TOKENS,
-             k=SPEC_K, tag_prefix="serving/spec"):
+def run_spec(m, params, csv_rows, identity, num_requests=8,
+             new_tokens=SPEC_NEW_TOKENS, k=SPEC_K,
+             tag_prefix="serving/spec"):
     """Repetitive burst through the n-gram speculative engine vs. the
     plain chunked engine: same streams (greedy identity is asserted),
     fewer weight passes."""
@@ -414,7 +438,7 @@ def run_spec(m, params, csv_rows, num_requests=8, new_tokens=SPEC_NEW_TOKENS,
                     ("plain", {})):
         eng = _fresh_engine(m, params, max_seq=max_seq, **kw)
         r = run_continuous(eng, wl)
-        st = eng.scheduler_stats
+        st = eng.stats()
         res[tag] = {"tps": r["useful"] / r["dt"], "steps": r["steps"],
                     "acceptance": st.acceptance_rate,
                     "tokens_per_step": st.spec_tokens_per_row,
@@ -428,6 +452,7 @@ def run_spec(m, params, csv_rows, num_requests=8, new_tokens=SPEC_NEW_TOKENS,
         streams[tag] = [list(out[r_]) for r_ in rids]
     identical = streams["spec"] == streams["plain"]
     res["identical"] = identical
+    identity["spec_vs_plain"] = identical
     csv_rows.extend([
         (f"{tag_prefix}_acceptance_rate",
          f"{res['spec']['acceptance']:.1%}",
@@ -449,7 +474,7 @@ def run_spec(m, params, csv_rows, num_requests=8, new_tokens=SPEC_NEW_TOKENS,
     return res
 
 
-def verify_token_identity(m, params, workload):
+def verify_token_identity(m, params, workload, identity):
     """Greedy chunked streams ≡ one-shot streams ≡ per-request generate()."""
     import jax.numpy as jnp
     eng = _fresh_engine(m, params)
@@ -461,50 +486,119 @@ def verify_token_identity(m, params, workload):
         np.testing.assert_array_equal(out[rid], out_one[rid_one])
         ref = eng.generate({"tokens": jnp.asarray(p)[None, :]}, mn)[0]
         np.testing.assert_array_equal(out[rid], ref[: len(out[rid])])
+    identity["chunked_vs_oneshot_vs_generate"] = True
     return True
 
 
 def _padding_rows(st, csv_rows, tag="serving/padding"):
-    """Decode-row packing accounting from a mixed burst's stats: rows
+    """Decode-row packing accounting from a burst's `EngineStats`: rows
     declare their true run length, so padding is paid only up to the
     step's width bucket — reported next to what the old policy (every
     row padded to the prefill chunk width whenever anything prefills)
     would have paid on the same steps."""
-    valid = st.dispatched_positions - st.padded_positions
-    fixed_total = valid + st.padded_positions_fixed
-    waste = st.padding_waste
-    waste_fixed = st.padded_positions_fixed / max(fixed_total, 1)
+    waste, waste_fixed = st.padding_waste, st.padding_waste_fixed
     csv_rows.extend([
         (f"{tag}_waste", f"{waste:.1%}",
-         f"{st.padded_positions}/{st.dispatched_positions} dispatched "
-         f"positions were padding (run-length packer)"),
+         "share of dispatched positions holding padding "
+         "(run-length packer)"),
         (f"{tag}_waste_fixed_width", f"{waste_fixed:.1%}",
          "same steps under the old pad-to-chunk-width policy"),
     ])
     return {"waste": waste, "waste_fixed": waste_fixed}
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded serving: identity + per-device pool bytes vs the model axis
+# ---------------------------------------------------------------------------
+
+SHARD_PREFIX_LEN = 16
+SHARD_NEW_TOKENS = 10
+
+
+def run_sharded(csv_rows, identity):
+    """The full serving feature stack under every ``model``-axis size the
+    local devices allow (1 is the degenerate mesh — always runs, so this
+    section can never be silently skipped): greedy streams must match
+    the unsharded engine token-for-token while per-device page-pool
+    bytes shrink with the axis. Uses an Hkv = 4 variant of the smoke
+    config — pools shard over KV heads, so Hkv must divide the axis
+    (that requirement is enforced at engine construction)."""
+    cfg = dataclasses.replace(C.get_smoke_config("qwen25-05b"),
+                              num_heads=8, num_kv_heads=4, head_dim=16)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size,
+                          (SHARD_PREFIX_LEN,)).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (t,)
+                                            ).astype(np.int32)])
+               for t in (5, 12, 9, 3)]
+    sizes = [s for s in (1, 2, 4)
+             if s <= jax.device_count() and cfg.num_kv_heads % s == 0]
+
+    def serve(mesh):
+        eng = GenerationEngine(m, params, max_seq=64, num_slots=4,
+                               page_size=8, prefill_chunk=4,
+                               kv_quant="int8", spec_decode="ngram",
+                               spec_k=4, mesh=mesh)
+        rids = [eng.submit(p, SHARD_NEW_TOKENS, prefix_id="sys")
+                for p in prompts]
+        out = eng.drain()
+        return [list(out[r]) for r in rids], eng.stats()
+
+    ref, st0 = serve(None)
+    bytes_per_dev = {}
+    identical = True
+    for size in sizes:
+        got, st = serve(serving_mesh(size))
+        identical &= got == ref
+        bytes_per_dev[size] = st.kv_pool_bytes_per_device
+        csv_rows.append(
+            (f"serving/sharded_kv_pool_bytes_per_device_model{size}",
+             str(st.kv_pool_bytes_per_device),
+             f"of {st.kv_pool_bytes} global pool bytes "
+             f"({st.kv_pool_bytes / max(st.kv_pool_bytes_per_device, 1):.1f}"
+             f"x reduction)"))
+    shrink = bytes_per_dev[sizes[0]] / max(bytes_per_dev[sizes[-1]], 1)
+    identity["sharded_vs_unsharded"] = identical
+    csv_rows.extend([
+        ("serving/sharded_axis_sizes", "/".join(map(str, sizes)),
+         f"{jax.device_count()} local devices (force more with "
+         f"XLA_FLAGS=--xla_force_host_platform_device_count=4)"),
+        ("serving/sharded_token_identity", str(identical),
+         "greedy sharded streams ≡ unsharded (chunked+int8+prefix+spec)"),
+        ("serving/sharded_per_device_shrink",
+         f"{shrink:.1f}x",
+         f"pool bytes/device, model={sizes[0]} vs model={sizes[-1]}"),
+    ])
+    return {"identical": identical, "sizes": sizes,
+            "bytes_per_device": bytes_per_dev}
+
+
 def run(csv_rows: list, smoke: bool = False) -> dict:
     cfg = C.get_smoke_config("qwen25-05b")
     m = build_model(cfg)
     params = m.init(jax.random.PRNGKey(0))
+    identity: dict = {}   # section name → asserted comparison outcome
 
     if smoke:
         # tier-1 end-to-end gate: small burst through the chunked engine,
         # identity vs one-shot + generate(), prefix-FLOP accounting, one
-        # speculative-decode burst
+        # speculative-decode burst, one sharded burst
         workload = make_workload(cfg, num_requests=6,
                                  budgets=(24, 6, 8, 6, 12, 8))
-        identical = verify_token_identity(m, params, workload[:3])
+        identical = verify_token_identity(m, params, workload[:3], identity)
         eng_cont = _fresh_engine(m, params)
         r = run_continuous(eng_cont, workload)
-        pack = _padding_rows(eng_cont.scheduler_stats, csv_rows,
+        pack = _padding_rows(eng_cont.stats(), csv_rows,
                              tag="serving/smoke_padding")
         kv = run_kv_quant(m, params, csv_rows)
         prefix = run_prefix_sharing(m, params, csv_rows, prefix_len=32,
                                     num_requests=3, new_tokens=8)
-        spec = run_spec(m, params, csv_rows, num_requests=4, new_tokens=12,
-                        tag_prefix="serving/smoke_spec")
+        spec = run_spec(m, params, csv_rows, identity, num_requests=4,
+                        new_tokens=12, tag_prefix="serving/smoke_spec")
+        sharded = run_sharded(csv_rows, identity)
         csv_rows.extend([
             ("serving/smoke_sustained_tps", f"{r['useful'] / r['dt']:.1f}",
              f"{r['useful']} tokens, {r['steps']} unified dispatches"),
@@ -514,7 +608,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
              "chunked ≡ one-shot ≡ generate()"),
         ])
         return {"token_identical": identical, "spec": spec,
-                "padding": pack, **kv, **prefix}
+                "padding": pack, "sharded": sharded,
+                "identity_sections": identity, **kv, **prefix}
 
     workload = make_workload(cfg)
     su, sl, ss, sdt = run_static(_fresh_engine(m, params), workload)
@@ -522,12 +617,13 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     r = run_continuous(eng_cont, workload)
     cu, cl, ct, cs, cdt = (r["useful"], r["latencies"], r["ttfts"],
                            r["steps"], r["dt"])
-    pack = _padding_rows(eng_cont.scheduler_stats, csv_rows)
-    identical = verify_token_identity(m, params, workload)
+    pack = _padding_rows(eng_cont.stats(), csv_rows)
+    identical = verify_token_identity(m, params, workload, identity)
     convoy = run_convoy(m, params, csv_rows)
     kv = run_kv_quant(m, params, csv_rows)
     prefix = run_prefix_sharing(m, params, csv_rows)
-    spec = run_spec(m, params, csv_rows)
+    spec = run_spec(m, params, csv_rows, identity)
+    sharded = run_sharded(csv_rows, identity)
 
     s_tps, c_tps = su / sdt, cu / cdt
     rows = [
@@ -555,6 +651,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             "continuous_p95": float(np.percentile(cl, 95)),
             "ttft_p95": float(np.percentile(ct, 95)),
             "token_identical": identical, "spec": spec, "padding": pack,
+            "sharded": sharded, "identity_sections": identity,
             **convoy, **kv, **prefix}
 
 
@@ -567,8 +664,30 @@ if __name__ == "__main__":
     out = run(rows, smoke=args.smoke)
     for r in rows:
         print(",".join(str(x) for x in r))
+    # the skip guard: every asserted identity section must have RUN and
+    # passed — a section that was silently skipped leaves its key missing,
+    # which fails the gate just like a mismatch would
+    sections = out.get("identity_sections", {})
+    bad = [k for k in REQUIRED_IDENTITY if sections.get(k) is not True]
+    if bad:
+        print(f"IDENTITY-SECTIONS missing or failed: {bad} "
+              f"(ran: {sections})", file=sys.stderr)
+        sys.exit(1)
+    print(f"IDENTITY-SECTIONS ok: {sorted(sections)}")
     assert out["token_identical"]
     assert out["kv_bytes_reduction"] >= 0.40
+    # sharded pools must actually stripe: with >1 device the per-device
+    # bytes at the largest axis shrink by the axis size (exactly linear —
+    # Hkv divides), and streams matched (asserted via identity sections)
+    sh = out["sharded"]
+    if len(sh["sizes"]) > 1:
+        lo, hi = sh["sizes"][0], sh["sizes"][-1]
+        # global footprint is axis-invariant …
+        assert sh["bytes_per_device"][hi] * hi \
+            == sh["bytes_per_device"][lo] * lo
+        # … so per-device bytes shrink linearly with the axis size
+        assert sh["bytes_per_device"][hi] \
+            == sh["bytes_per_device"][lo] * lo // hi
     # prefix-aware chunked prefill must actually skip the aliased pages
     assert out["prefix_chunked"]["skipped"] > 0
     assert out["prefix_chunked"]["prefill_tokens"] \

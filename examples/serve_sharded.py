@@ -1,0 +1,93 @@
+"""Mesh-sharded serving demo: tensor-parallel page pools under the
+continuous-batching engine.
+
+The paper splits one model's inference across heterogeneous compute
+(CPU + FPGA) while keeping a single logical execution stream; this demo
+scales the same idea across a device mesh. ``GenerationEngine(mesh=...)``
+serves a TP-sharded model with TP-sharded paged KV:
+
+  * **weights** shard by the production rules in
+    `repro.distributed.sharding.param_pspec` (column-parallel QKV,
+    row-parallel O/down, vocab-parallel head),
+  * **page pools** stripe over KV heads on the ``model`` axis
+    (`paged_cache_pspec`) — each device holds ``Hkv / |model|`` heads of
+    every physical page, so per-device KV memory shrinks linearly with
+    the axis,
+  * **everything host-visible replicates**: the pager's free list,
+    refcounts, prefix index and page tables never change — page IDs are
+    device-agnostic, so admission, eviction, prefix sharing and
+    speculative rollback run untouched,
+  * greedy sharded streams are **token-identical** to the single-device
+    engine — the demo checks this at the end.
+
+Run (any machine; forces 4 virtual CPU devices):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/serve_sharded.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=4")
+
+import dataclasses                                            # noqa: E402
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+
+import repro.configs as configs                               # noqa: E402
+from repro.distributed import serving_mesh                    # noqa: E402
+from repro.models import build_model                          # noqa: E402
+from repro.serving import GenerationEngine                    # noqa: E402
+
+
+def serve(model, params, prompts, mesh, label):
+    eng = GenerationEngine(model, params, max_seq=96, num_slots=4,
+                           page_size=8, prefill_chunk=8, kv_quant="int8",
+                           spec_decode="ngram", spec_k=4, mesh=mesh)
+    rids = [eng.submit(p, 12, prefix_id="sys") for p in prompts]
+    out = eng.drain()
+    st = eng.stats()
+    print(f"\n--- {label} ---")
+    print(f"model axis {st.model_axis}: "
+          f"{st.kv_pool_bytes_per_device:,} pool bytes/device "
+          f"(global {st.kv_pool_bytes:,}); "
+          f"{st.dispatches} dispatches, "
+          f"{st.prefix_shared_pages} pages aliased, "
+          f"acceptance {st.acceptance_rate:.0%}")
+    return [list(out[r]) for r in rids]
+
+
+def main():
+    # KV heads must divide the model axis (Hkv = 4 → 1-, 2- and 4-way
+    # meshes all work; the engine rejects indivisible combinations with
+    # a construction-time error)
+    cfg = dataclasses.replace(configs.get_smoke_config("qwen25-05b"),
+                              num_heads=8, num_kv_heads=4, head_dim=16)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    # shared system prefix (aliased across all three requests) + a
+    # repetitive tail (so the n-gram self-drafter has something to match)
+    prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [prefix, np.tile(rng.integers(0, cfg.vocab_size, (3,)
+                                      ).astype(np.int32), reps)])
+        for reps in (4, 6, 5)]
+
+    print(f"{jax.device_count()} local devices")
+    ref = serve(model, params, prompts, None, "unsharded (mesh=None)")
+    for size in (1, 2, 4):
+        if size > jax.device_count():
+            break
+        got = serve(model, params, prompts, serving_mesh(size),
+                    f"mesh ('model',) of size {size}")
+        assert got == ref, f"mesh size {size} diverged"
+    print("\ngreedy streams are token-identical across every mesh size")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,15 @@ mkdir -p "$RESULTS_DIR"
 rm -f "$RESULTS_DIR"/*.xml "$RESULTS_DIR"/*.log   # never count a stale run
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# --- report the device count this gate runs with: the CI matrix runs the
+# gate once on the single real device and once under
+# XLA_FLAGS=--xla_force_host_platform_device_count=4 (exercising the
+# mesh-sharded serving paths), and the log must say which one this was
+python - <<'PY'
+import jax
+print(f"DEVICES: count={jax.device_count()} backend={jax.default_backend()}")
+PY
+
 # --- docs-link gate: every relative link in docs/*.md + README.md and every
 # examples/ or benchmarks/ path referenced in docs must exist, so the docs
 # cannot rot silently as the tree moves under them

@@ -1,3 +1,4 @@
 from repro.distributed.sharding import (  # noqa: F401
     batch_axes, cache_pspec, constrain, current_mesh, make_sharding,
-    param_pspec, pspec_tree, shard_map, use_mesh)
+    paged_cache_pspec, param_pspec, pspec_tree, serving_mesh, shard_map,
+    use_mesh)

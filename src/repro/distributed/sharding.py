@@ -286,6 +286,56 @@ def cache_pspec(path: str, leaf: Any, mesh: Mesh, cfg=None) -> P:
 
 
 # ---------------------------------------------------------------------------
+# Serving page-pool sharding (tensor-parallel paged KV)
+# ---------------------------------------------------------------------------
+
+def paged_cache_pspec(path: str, leaf: Any, mesh: Mesh, cfg=None) -> P:
+    """Sharding for the serving engine's paged decode cache.
+
+    Page pools shard over **KV heads** on the ``model`` axis — page IDs
+    index the (replicated) leading ``num_pages`` dim, so the host-side
+    pager's free list / refcounts / page tables stay device-agnostic and
+    a physical page is simply striped across the mesh:
+
+      k/v pools   [L, N, P, Hkv, hd] → heads over ``model``
+      ks/vs strips[L, N, P, Hkv]     → heads over ``model``
+      ring k/v    [L, B, W, Hkv, hd] → heads over ``model`` (same rule)
+
+    Bounded per-slot state (SSM states, MLA latents, conv tails) is
+    replicated — its footprint is small by construction. Head counts that
+    don't divide the axis fall back to replication here, but the serving
+    engine refuses such meshes up front (a clear construction-time error
+    beats a silently-replicated pool).
+    """
+    shape = tuple(leaf.shape)
+    leafname = path.split("/")[-1]
+    msize = mesh.shape.get("model", 1)
+    if leafname in ("k", "v") and len(shape) >= 2 and shape[-2] % msize == 0:
+        return P(*([None] * (len(shape) - 2) + ["model", None]))
+    if leafname in ("ks", "vs") and shape and shape[-1] % msize == 0:
+        return P(*([None] * (len(shape) - 1) + ["model"]))
+    return P(*([None] * len(shape)))
+
+
+def serving_mesh(model: int | None = None) -> Mesh:
+    """A 1-D ``('model',)`` mesh over the first ``model`` local devices.
+
+    The serving engine's tensor-parallel axis: weights column/row-shard
+    through `param_pspec`, page pools shard over KV heads through
+    `paged_cache_pspec`, and everything host-visible (page tables, token
+    blocks, sampled tokens) stays replicated. ``model=None`` takes every
+    local device; ``model=1`` is the degenerate mesh whose dispatches are
+    identical to the unsharded path.
+    """
+    devices = jax.devices()
+    n = len(devices) if model is None else model
+    if n < 1 or n > len(devices):
+        raise ValueError(f"serving_mesh(model={model}): have "
+                         f"{len(devices)} devices")
+    return Mesh(np.asarray(devices[:n]), ("model",))
+
+
+# ---------------------------------------------------------------------------
 # Tree helpers
 # ---------------------------------------------------------------------------
 

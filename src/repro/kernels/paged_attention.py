@@ -192,6 +192,42 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
     return jnp.moveaxis(out, 2, 1)
 
 
+def paged_attention_chunk_sharded(q: jax.Array, k_pool: jax.Array,
+                                  ks: jax.Array, v_pool: jax.Array,
+                                  vs: jax.Array, page_table: jax.Array,
+                                  pos: jax.Array, *, mesh,
+                                  scale: float | None = None,
+                                  interpret: bool = False) -> jax.Array:
+    """Tensor-parallel form: the chunk kernel under `shard_map` over the
+    KV-head axis of the ``model`` mesh axis.
+
+    KV heads are independent throughout — the online softmax, the causal
+    mask, and the dequant all run per (batch, kv-head) grid cell — so
+    each mesh shard simply runs the unmodified kernel body over its local
+    ``Hkv / |model|`` heads of the pool (`distributed.paged_cache_pspec`
+    stripes the pools the same way) with ZERO cross-device communication
+    inside the kernel; the output concatenates back along heads. Page
+    tables and positions are replicated (page IDs are device-agnostic).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
+
+    if mesh.shape.get("model", 1) == 1:
+        return paged_attention_chunk(q, k_pool, ks, v_pool, vs, page_table,
+                                     pos, scale=scale, interpret=interpret)
+    head = P(None, None, "model")                       # [N, P, Hkv]
+    return shard_map(
+        lambda q_, k_, ks_, v_, vs_, t_, p_: paged_attention_chunk(
+            q_, k_, ks_, v_, vs_, t_, p_, scale=scale, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, None, "model", None, None), P(*head, None), head,
+                  P(*head, None), head, P(None, None), P(None, None)),
+        out_specs=P(None, None, "model", None, None),
+        check_vma=False,
+    )(q, k_pool, ks, v_pool, vs, page_table, pos)
+
+
 def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
                     v_pool: jax.Array, vs: jax.Array,
                     page_table: jax.Array, pos: jax.Array, *,

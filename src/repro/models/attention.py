@@ -299,6 +299,8 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     valid = pos >= 0
     rope_pos = jnp.where(valid, pos, 0)
     q, k1, v1 = _project_qkv(p, x, cfg, rope_pos, 0, name)  # [B, C, H(kv), hd]
+    k1 = constrain(k1, ("batch", None, "kv_heads", None))
+    v1 = constrain(v1, ("batch", None, "kv_heads", None))
     phys = jnp.take_along_axis(page_table, rope_pos // page_size, axis=1)
     phys = jnp.where(valid, phys, 0)          # padding → scratch page 0
     offset = jnp.where(valid, rope_pos % page_size, 0)
@@ -317,27 +319,51 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
         k1.reshape(kv_shape).astype(pool["k"].dtype))
     new_pool["v"] = pool["v"].at[fp, fo].set(
         v1.reshape(kv_shape).astype(pool["v"].dtype))
+    # keep the pool mesh-sharded through the scatter (pools stripe over KV
+    # heads on the `model` axis — `distributed.paged_cache_pspec`); without
+    # the constraint GSPMD may gather the whole pool onto every device
+    new_pool["k"] = constrain(new_pool["k"], (None, None, "kv_heads", None))
+    new_pool["v"] = constrain(new_pool["v"], (None, None, "kv_heads", None))
+    if quant:
+        new_pool["ks"] = constrain(new_pool["ks"], (None, None, "kv_heads"))
+        new_pool["vs"] = constrain(new_pool["vs"], (None, None, "kv_heads"))
 
     g = cfg.num_heads // cfg.num_kv_heads
     nm = (lambda s_: None) if name is None else name
     if quant:
+        from repro.distributed.sharding import current_mesh
         from repro.kernels import paged_attention as paged_kernel
         if paged_kernel.supported():
             qk = q.reshape(b, c, cfg.num_kv_heads, g, cfg.head_dim)
-            out = paged_kernel.paged_attention_chunk(
-                qk, new_pool["k"], new_pool["ks"], new_pool["v"],
-                new_pool["vs"], page_table, pos,
-                scale=cfg.head_dim ** -0.5)
+            mesh = current_mesh()
+            if (mesh is not None and mesh.shape.get("model", 1) > 1
+                    and cfg.num_kv_heads % mesh.shape["model"] == 0):
+                # tensor-parallel: shard_map over the head axis — each
+                # device runs the unmodified kernel on its local heads
+                out = paged_kernel.paged_attention_chunk_sharded(
+                    qk, new_pool["k"], new_pool["ks"], new_pool["v"],
+                    new_pool["vs"], page_table, pos, mesh=mesh,
+                    scale=cfg.head_dim ** -0.5)
+            else:
+                out = paged_kernel.paged_attention_chunk(
+                    qk, new_pool["k"], new_pool["ks"], new_pool["v"],
+                    new_pool["vs"], page_table, pos,
+                    scale=cfg.head_dim ** -0.5)
             out = out.reshape(b, c, cfg.q_dim).astype(
                 jnp.dtype(cfg.activation_dtype))
             return linear(p["wo"], out, nm("wo")), new_pool
 
     # gather-based read: page table → logical [B, S_slot, Hkv, hd] view
+    # (the gathered view inherits the pool's head sharding, so each device
+    # gathers and attends only its local heads — the reference semantics
+    # of the shard_map'd kernel above)
     s_slot = page_table.shape[1] * page_size
     ck = new_pool["k"][page_table].reshape(b, s_slot, cfg.num_kv_heads,
                                            cfg.head_dim)
     cv = new_pool["v"][page_table].reshape(b, s_slot, cfg.num_kv_heads,
                                            cfg.head_dim)
+    ck = constrain(ck, ("batch", None, "kv_heads", None))
+    cv = constrain(cv, ("batch", None, "kv_heads", None))
     adt = jnp.dtype(cfg.activation_dtype)
     if quant:
         ks = new_pool["ks"][page_table].reshape(b, s_slot, cfg.num_kv_heads)
@@ -346,6 +372,7 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
         cv = _kv_dequant(cv, vs, adt)
     k_pos = jnp.broadcast_to(jnp.arange(s_slot)[None, :], (b, s_slot))
     qg = q.reshape(b, c, cfg.num_kv_heads, g, cfg.head_dim)
+    qg = constrain(qg, ("batch", None, "kv_heads", None, None))
     out = _sdpa(qg, ck, cv, pos, k_pos, causal=True, window=0,
                 scale=cfg.head_dim ** -0.5)
     out = out.reshape(b, c, cfg.q_dim)

@@ -219,6 +219,10 @@ class Model:
         adt = jnp.dtype(cfg.activation_dtype)
         x = embed_lookup(params["embed"], tokens,
                          scale=cfg.scale_embed).astype(adt)  # [B, C, D]
+        # under a serving mesh the embedding table is vocab-sharded; pin
+        # the gathered activations replicated before they enter the stack
+        # (the block mixers re-shard K/V/heads per their own constraints)
+        x = constrain(x, ("batch", None, None))
         x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
                                         mode="chunk", positions=pos,
                                         cache=cache, page_table=page_table)

@@ -1,6 +1,6 @@
 from repro.serving.engine import (  # noqa: F401
-    GenerationEngine, SamplerConfig, sample, sample_batched)
+    EngineStats, GenerationEngine, SamplerConfig, sample, sample_batched)
 from repro.serving.kv_pager import (  # noqa: F401
-    KVPager, PageAllocationError, PagerConfig, commit_prefill)
+    KVPager, PageAllocationError, PagerConfig, PagerStats, commit_prefill)
 from repro.serving.scheduler import (  # noqa: F401
-    Request, Scheduler, ngram_propose, width_family)
+    Request, Scheduler, ngram_propose, spec_k_buckets, width_family)

@@ -46,6 +46,18 @@ subsystem:
     suffixes roll the paged KV back via `KVPager.truncate`. One weight
     stream now amortizes over up to ``spec_k + 1`` emitted tokens — the
     lever the paper's 5.1 tok/s memory-bandwidth ceiling asks for.
+    ``spec_adaptive=True`` lets the scheduler walk ``spec_k`` through
+    ``{1, 2, 4, …, spec_k}`` from an EMA of the measured acceptance.
+  * tensor parallelism — ``GenerationEngine(mesh=...)`` serves a
+    TP-sharded model with TP-sharded paged KV over the mesh's ``model``
+    axis: weights shard by the `distributed.sharding.param_pspec` rules,
+    page pools stripe over KV heads (`paged_cache_pspec`), and every
+    chunk/decode/verify dispatch is jit'd with explicit in/out shardings
+    (page tables, token blocks and sampled tokens replicated). Page IDs
+    are device-agnostic, so the host-side pager and scheduler are
+    untouched by construction — admission, eviction, prefix sharing and
+    rollback run identically, and greedy sharded streams are
+    token-identical to the single-device engine.
 """
 from __future__ import annotations
 
@@ -55,7 +67,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.kv_pager import (KVPager, PagerConfig, commit_prefill)
+from repro.serving.kv_pager import (KVPager, PagerConfig, PagerStats,
+                                    commit_prefill)
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -63,6 +76,38 @@ from repro.serving.scheduler import Request, Scheduler
 class SamplerConfig:
     temperature: float = 0.0    # 0 ⇒ greedy
     top_k: int = 0              # 0 ⇒ full softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """One structured serving snapshot — the public metrics surface.
+
+    Everything the benchmarks (and an operator dashboard) need in one
+    read: pager occupancy, dispatch/packing accounting, speculative
+    acceptance, and the memory footprint of the page pools — global and
+    **per device** (under a ``model`` mesh the pools stripe over KV
+    heads, so the per-device number shrinks ~linearly with the axis).
+    """
+    pager: PagerStats
+    # dispatch / packing
+    dispatches: int               # unified steps issued
+    prefill_tokens: int           # prompt tokens run through the model
+    prefill_tokens_skipped: int   # aliased prompt tokens never re-run
+    prefix_shared_pages: int      # pages aliased instead of allocated
+    padding_waste: float          # padding / dispatched positions
+    padding_waste_fixed: float    # same steps under pad-to-chunk-width
+    # speculative decoding
+    acceptance_rate: float
+    spec_tokens_per_row: float
+    draft_tokens: int
+    accepted_tokens: int
+    rollbacks: int
+    spec_k_now: int               # current draft length (adaptive)
+    # sharding + memory
+    model_axis: int               # |model| mesh axis (1 = unsharded)
+    kv_pool_bytes: int            # global page-pool footprint, all layers
+    kv_pool_bytes_per_device: int
+    kv_bytes_per_token: float
 
 
 def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
@@ -108,11 +153,35 @@ class GenerationEngine:
                  spec_decode: str | None = None,
                  spec_k: int = 4,
                  spec_ngram_max: int = 3,
+                 spec_adaptive: bool = False,
                  draft_model=None, draft_params=None,
-                 draft_fn=None):
+                 draft_fn=None,
+                 mesh=None):
         self.model = model
         self.params = params
         self.cfg = model.cfg
+        # tensor-parallel serving: a jax Mesh with a `model` axis. Weights
+        # shard per param_pspec, page pools stripe over KV heads per
+        # paged_cache_pspec, host-side pager/scheduler stay replicated
+        # single-authority. Indivisible head counts fail HERE, not inside
+        # a kernel three layers down.
+        self._mesh = mesh
+        if mesh is not None:
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh axes {mesh.axis_names} carry no 'model' axis — "
+                    f"serving tensor parallelism shards over 'model' "
+                    f"(see distributed.serving_mesh)")
+            msize = mesh.shape["model"]
+            has_attn = any(kind.mixer in ("attn", "hymba")
+                           for kind, _ in model.cfg.segments())
+            if msize > 1 and has_attn \
+                    and model.cfg.num_kv_heads % msize != 0:
+                raise ValueError(
+                    f"num_kv_heads={model.cfg.num_kv_heads} is not "
+                    f"divisible by the {msize}-way 'model' mesh axis — "
+                    f"page pools shard over KV heads; choose a mesh size "
+                    f"that divides Hkv (or mesh=None)")
         self.max_seq = max_seq or model.cfg.max_seq_len
         self.sampler = sampler
         self.eos_id = eos_id
@@ -159,6 +228,7 @@ class GenerationEngine:
                     "full attention")
         self.spec_decode = spec_decode
         self.spec_k = spec_k
+        self.spec_adaptive = spec_adaptive
         self.spec_ngram_max = spec_ngram_max
         self.draft_model = draft_model
         self.draft_params = draft_params
@@ -224,24 +294,31 @@ class GenerationEngine:
             raise ValueError(
                 "spec_decode requires the chunked serving path (verify "
                 "runs are multi-token rows of the unified chunk dispatch)")
+        if self._mesh is not None and not chunked:
+            raise ValueError(
+                "mesh-sharded serving requires the chunked (token-budget) "
+                "path: archs with bounded per-slot sequential state "
+                "(ring/SSM/MLA) and the one-shot baseline stay "
+                "single-device — pass mesh=None")
         self._key = jax.random.PRNGKey(self._seed)
         self._tables_version = -1
         self._tables_dev = None
         self._tables_sliced = {}
+        self._init_mesh_placement()
         if chunked:
             # ONE compiled step for everything: prefill chunks + decode
             # token runs packed into a fixed [num_slots, c] block
-            self._chunk_sampled = jax.jit(self._chunk_step_fn,
-                                          donate_argnums=(1,))
-            self._chunk_greedy = jax.jit(self._chunk_greedy_fn,
-                                         donate_argnums=(1,))
+            self._chunk_sampled = self._jit_dispatch(self._chunk_step_fn,
+                                                     n_host=8, n_out=2)
+            self._chunk_greedy = self._jit_dispatch(self._chunk_greedy_fn,
+                                                    n_host=5, n_out=2)
             draft_fn = None
             sched_spec = None
             if self.spec_decode is not None:
-                self._spec_greedy = jax.jit(self._spec_greedy_fn,
-                                            donate_argnums=(1,))
-                self._spec_sampled = jax.jit(self._spec_sampled_fn,
-                                             donate_argnums=(1,))
+                self._spec_greedy = self._jit_dispatch(self._spec_greedy_fn,
+                                                       n_host=6, n_out=3)
+                self._spec_sampled = self._jit_dispatch(
+                    self._spec_sampled_fn, n_host=9, n_out=3)
                 sched_spec = "ngram" if self.spec_decode == "ngram" \
                     else "draft_fn"
                 if self.spec_decode == "draft_model":
@@ -252,6 +329,7 @@ class GenerationEngine:
             return Scheduler(pager, run_batch=self._exec_run_batch,
                              chunk_size=self.prefill_chunk,
                              spec_decode=sched_spec, spec_k=self.spec_k,
+                             adaptive_spec_k=self.spec_adaptive,
                              draft_fn=draft_fn,
                              ngram_max=self.spec_ngram_max)
         # one-shot path: one dispatch per admission fusing prefill + page
@@ -272,6 +350,53 @@ class GenerationEngine:
         """True when every cache entry is a page pool (no per-slot
         sequential state), i.e. the arch can run the chunked path."""
         return all(set(entry) == {"kv_pool"} for entry in cache.values())
+
+    # --- tensor-parallel placement ----------------------------------------
+    def _init_mesh_placement(self):
+        """Shard params + page pools over the serving mesh (no-op without
+        one). Weights follow `param_pspec` (column/row-parallel linears,
+        vocab-parallel head), pools follow `paged_cache_pspec` (KV heads
+        over ``model``); `self.params` itself stays untouched so the
+        static-batch `generate` baselines keep their single-device path.
+        """
+        if self._mesh is None:
+            self._params_run = self.params
+            return
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.distributed import sharding as shd
+        mesh = self._mesh
+        self._repl_sh = NamedSharding(mesh, P())
+        self._param_sh = shd.make_sharding(self.params, mesh,
+                                           shd.param_pspec, self.cfg)
+        self._cache_sh = shd.make_sharding(self._paged_cache, mesh,
+                                           shd.paged_cache_pspec)
+        self._params_run = jax.device_put(self.params, self._param_sh)
+        self._paged_cache = jax.device_put(self._paged_cache, self._cache_sh)
+
+    def _jit_dispatch(self, fn, *, n_host: int, n_out: int):
+        """jit one serving dispatch (cache donated).
+
+        Under a mesh the function is traced with the mesh active (so the
+        model's `constrain` calls resolve) and pinned with EXPLICIT in/out
+        shardings: params and cache as sharded, the ``n_host`` trailing
+        operands (page tables, token blocks, per-row metadata, PRNG keys)
+        and every output but the cache replicated, and the cache's out
+        sharding equal to its in sharding — the donated pool buffers
+        round-trip without resharding, step after step.
+        """
+        if self._mesh is None:
+            return jax.jit(fn, donate_argnums=(1,))
+        from repro.distributed.sharding import use_mesh
+
+        def traced(*args):
+            with use_mesh(self._mesh):
+                return fn(*args)
+
+        in_sh = (self._param_sh, self._cache_sh) + (self._repl_sh,) * n_host
+        out_sh = (self._repl_sh,) * (n_out - 1) + (self._cache_sh,)
+        return jax.jit(traced, donate_argnums=(1,),
+                       in_shardings=in_sh, out_shardings=out_sh)
 
     def _prefill_commit_fn(self, params, cache, tokens, slot, pages,
                            temp, topk, key, start_page=0):
@@ -502,7 +627,10 @@ class GenerationEngine:
         pager = self._scheduler.pager
         if self._tables_version != pager.version:   # upload only on mutation
             src = pager.page_tables if host_tables is None else host_tables
-            self._tables_dev = jnp.asarray(src)
+            if self._mesh is not None:   # page IDs are device-agnostic:
+                self._tables_dev = jax.device_put(src, self._repl_sh)
+            else:                        # tables replicate across the mesh
+                self._tables_dev = jnp.asarray(src)
             self._tables_version = pager.version
             self._tables_sliced = {}
         if n_blocks is None or n_blocks == self._tables_dev.shape[1]:
@@ -538,14 +666,14 @@ class GenerationEngine:
             # row, the leading-accept count + corrected/bonus token
             if not temps.any() and not topks.any():
                 fix, n_acc, self._paged_cache = self._spec_greedy(
-                    self.params, self._paged_cache, tables,
+                    self._params_run, self._paged_cache, tables,
                     jnp.asarray(tokens), jnp.asarray(pos),
                     jnp.asarray(row_slots), jnp.asarray(sample_idx),
                     jnp.asarray(n_draft))
             else:
                 self._key, sub = jax.random.split(self._key)
                 fix, n_acc, self._paged_cache = self._spec_sampled(
-                    self.params, self._paged_cache, tables,
+                    self._params_run, self._paged_cache, tables,
                     jnp.asarray(tokens), jnp.asarray(pos),
                     jnp.asarray(row_slots), jnp.asarray(sample_idx),
                     jnp.asarray(n_draft), jnp.asarray(temps),
@@ -553,13 +681,13 @@ class GenerationEngine:
             return np.asarray(fix), np.asarray(n_acc)
         if not temps.any() and not topks.any():
             out, self._paged_cache = self._chunk_greedy(
-                self.params, self._paged_cache, tables,
+                self._params_run, self._paged_cache, tables,
                 jnp.asarray(tokens), jnp.asarray(pos),
                 jnp.asarray(row_slots), jnp.asarray(sample_idx))
         else:
             self._key, sub = jax.random.split(self._key)
             out, self._paged_cache = self._chunk_sampled(
-                self.params, self._paged_cache, tables,
+                self._params_run, self._paged_cache, tables,
                 jnp.asarray(tokens), jnp.asarray(pos),
                 jnp.asarray(row_slots), jnp.asarray(sample_idx),
                 jnp.asarray(temps), jnp.asarray(topks), sub)
@@ -594,12 +722,12 @@ class GenerationEngine:
                         jnp.full((b, c), -1, jnp.int32),
                         jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32))
                 _, self._paged_cache = self._chunk_greedy(
-                    self.params, self._paged_cache, tables, *args)
+                    self._params_run, self._paged_cache, tables, *args)
                 n += 1
                 if sampled:
                     self._key, sub = jax.random.split(self._key)
                     _, self._paged_cache = self._chunk_sampled(
-                        self.params, self._paged_cache, tables, *args,
+                        self._params_run, self._paged_cache, tables, *args,
                         jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
                         sub)
                     n += 1
@@ -607,12 +735,12 @@ class GenerationEngine:
                     continue        # a width-1 row can never carry a draft
                 nd = jnp.zeros(b, jnp.int32)
                 _, _, self._paged_cache = self._spec_greedy(
-                    self.params, self._paged_cache, tables, *args, nd)
+                    self._params_run, self._paged_cache, tables, *args, nd)
                 n += 1
                 if sampled:
                     self._key, sub = jax.random.split(self._key)
                     _, _, self._paged_cache = self._spec_sampled(
-                        self.params, self._paged_cache, tables, *args, nd,
+                        self._params_run, self._paged_cache, tables, *args, nd,
                         jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
                         sub)
                     n += 1
@@ -725,6 +853,60 @@ class GenerationEngine:
     @property
     def scheduler_stats(self):
         return self._scheduler.stats if self._scheduler else None
+
+    # ------------------------------------------------------------- snapshot
+    def stats(self) -> EngineStats:
+        """One structured serving snapshot (see `EngineStats`).
+
+        The public metrics surface: benchmarks and dashboards read THIS,
+        not the scheduler's or pager's internal counters. Initializes the
+        serving state lazily (like `submit`) so a fresh engine can be
+        inspected before its first request.
+        """
+        if self._scheduler is None:
+            self._scheduler = self._serving_init()
+        st = self._scheduler.stats
+        pool_total = pool_per_dev = 0
+        for seg in self._paged_cache.values():
+            pool = seg.get("kv_pool")
+            if not pool:
+                continue
+            for a in pool.values():
+                pool_total += int(np.prod(a.shape)) * a.dtype.itemsize
+                shard = a.sharding.shard_shape(a.shape) \
+                    if hasattr(a, "sharding") else a.shape
+                pool_per_dev += int(np.prod(shard)) * a.dtype.itemsize
+        valid = st.dispatched_positions - st.padded_positions
+        fixed_total = valid + st.padded_positions_fixed
+        model_axis = 1 if self._mesh is None \
+            else int(self._mesh.shape.get("model", 1))
+        return EngineStats(
+            pager=self._scheduler.pager.stats(),
+            dispatches=st.decode_steps,
+            prefill_tokens=st.prefill_tokens,
+            prefill_tokens_skipped=st.prefill_tokens_skipped,
+            prefix_shared_pages=st.prefix_shared_pages,
+            padding_waste=st.padding_waste,
+            padding_waste_fixed=(st.padded_positions_fixed
+                                 / max(fixed_total, 1)),
+            acceptance_rate=st.acceptance_rate,
+            spec_tokens_per_row=st.spec_tokens_per_row,
+            draft_tokens=st.draft_tokens,
+            accepted_tokens=st.accepted_tokens,
+            rollbacks=st.rollbacks,
+            spec_k_now=self._scheduler.spec_k_cur,
+            model_axis=model_axis,
+            kv_pool_bytes=pool_total,
+            kv_pool_bytes_per_device=pool_per_dev,
+            kv_bytes_per_token=self.paged_kv_bytes_per_token())
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative counters behind `stats()` (occupancy and
+        the adaptive ``spec_k`` state are live state, not counters, and
+        are untouched) — benchmarks call this between warmup and the
+        timed run."""
+        if self._scheduler is not None:
+            self._scheduler.stats = type(self._scheduler.stats)()
 
     # --------------------------------------------------- capacity accounting
     def paged_kv_page_bytes(self) -> int:

@@ -108,6 +108,25 @@ class PagerConfig:
     pages_per_slot: int   # logical blocks per slot (slot capacity / P)
 
 
+@dataclasses.dataclass(frozen=True)
+class PagerStats:
+    """Point-in-time occupancy snapshot of the page accounting.
+
+    Page IDs are device-agnostic, so this is also the whole truth for a
+    mesh-sharded engine — a physical page is striped across devices, but
+    it is still ONE page here.
+    """
+    pages_total: int      # physical pages incl. the scratch page 0
+    pages_free: int
+    pages_used: int       # drawn from the pool (aliased pages count once)
+    pages_aliased: int    # physical pages with more than one owner
+    pages_pinned: int     # pages held resident by a pin_prefix namespace
+    pages_reserved: int   # promised to active slots, not yet drawn
+    logical_pages: int    # per-slot mappings (aliased count per owner)
+    slots_active: int
+    slots_free: int
+
+
 def _chain_key(prev: bytes, chunk: np.ndarray) -> bytes:
     h = hashlib.sha1(prev)
     h.update(np.ascontiguousarray(chunk, np.int32).tobytes())
@@ -174,6 +193,24 @@ class KVPager:
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.cfg.page_size)
+
+    def stats(self) -> PagerStats:
+        """Structured occupancy snapshot (the engine folds this into its
+        `GenerationEngine.stats()` surface — read that, not the raw
+        counters)."""
+        pinned: set[int] = set()
+        for pages in self._pin_pages.values():
+            pinned |= pages
+        return PagerStats(
+            pages_total=self.cfg.num_pages,
+            pages_free=len(self.free_pages),
+            pages_used=self.pages_in_use,
+            pages_aliased=self.shared_pages,
+            pages_pinned=len(pinned),
+            pages_reserved=self._reserved,
+            logical_pages=self.logical_pages_in_use,
+            slots_active=len(self.slot_pages),
+            slots_free=len(self.free_slots))
 
     # ----------------------------------------------------------- lifecycle
     def fits(self, prompt_len: int, max_new_tokens: int) -> bool:

@@ -90,12 +90,25 @@ def ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3,
     return []
 
 
+def spec_k_buckets(spec_k_max: int) -> list[int]:
+    """Draft-length buckets adaptive speculation moves through: powers of
+    two up to ``spec_k_max``, plus ``spec_k_max`` itself. Bounded at
+    O(log k), so the compiled verify-width family stays bounded too."""
+    ks = {1, spec_k_max}
+    k = 2
+    while k < spec_k_max:
+        ks.add(k)
+        k *= 2
+    return sorted(ks)
+
+
 def width_family(chunk_size: int, spec_k: int = 0) -> list[int]:
     """Column-width buckets the token-budget packer may dispatch.
 
     Powers of two up to ``chunk_size`` (plus ``chunk_size`` itself and,
-    under speculative decoding, the verify-run width ``spec_k + 1``), so
-    the compiled-step family stays O(log chunk) wide while rows are
+    under speculative decoding, the verify-run width ``kb + 1`` for every
+    draft-length bucket adaptive ``spec_k`` may visit), so the
+    compiled-step family stays O(log chunk + log k) wide while rows are
     padded only to the smallest bucket covering the step's longest
     declared run — not unconditionally to the prefill chunk width.
     """
@@ -105,7 +118,7 @@ def width_family(chunk_size: int, spec_k: int = 0) -> list[int]:
         widths.add(w)
         w *= 2
     if spec_k:
-        widths.add(spec_k + 1)
+        widths.update(kb + 1 for kb in spec_k_buckets(spec_k))
     return sorted(widths)
 
 
@@ -226,6 +239,7 @@ class Scheduler:
                  chunk_size: int = 16,
                  spec_decode: str | None = None,
                  spec_k: int = 4,
+                 adaptive_spec_k: bool = False,
                  draft_fn: Callable | None = None,
                  ngram_max: int = 3):
         self.pager = pager
@@ -252,9 +266,20 @@ class Scheduler:
         self._decode = decode
         self.chunk_size = chunk_size
         self.spec_decode = spec_decode
-        self.spec_k = spec_k
+        self.spec_k = spec_k              # max draft length (static cap)
         self._draft_fn = draft_fn
         self.ngram_max = ngram_max
+        # adaptive draft length: walk spec_k_cur through the bucket family
+        # {1, 2, 4, …, spec_k} from an EMA of the measured per-step
+        # acceptance fraction — a drafter that keeps missing stops paying
+        # k wasted verify positions per row; one that keeps hitting earns
+        # its full width back. The verify dispatch always materializes
+        # spec_k + 1 logits (static shape), so adapting k only changes
+        # the packed row widths, never the compiled family.
+        self.adaptive_spec_k = adaptive_spec_k
+        self.spec_k_cur = spec_k
+        self._k_buckets = spec_k_buckets(spec_k)
+        self._accept_ema: float | None = None
         self.width_buckets = width_family(
             chunk_size, spec_k if spec_decode is not None else 0)
         self.queue: deque[Request] = deque()
@@ -377,7 +402,8 @@ class Scheduler:
             if st.prefilling:
                 continue
             r = st.request
-            k_eff = min(self.spec_k, r.max_new_tokens - len(st.generated) - 1)
+            k_eff = min(self.spec_k_cur,
+                        r.max_new_tokens - len(st.generated) - 1)
             if k_eff <= 0:
                 continue
             ctx = np.concatenate([r.tokens,
@@ -502,6 +528,7 @@ class Scheduler:
                                              n_draft=n_draft)
         self.stats.decode_steps += 1
         self.stats.slot_steps += b
+        step_drafted = step_accepted = 0
         for slot in list(self.slots):
             st = self.slots[slot]
             if slot in chunk_tok:
@@ -537,6 +564,8 @@ class Scheduler:
                 self.stats.spec_rows += 1
                 self.stats.draft_tokens += len(d)
                 self.stats.accepted_tokens += na
+                step_drafted += len(d)
+                step_accepted += na
             if st.done:
                 self._finish(slot)
             elif na < len(d):
@@ -545,6 +574,27 @@ class Scheduler:
                 self.stats.rollbacks += 1
                 self.stats.rollback_pages += self.pager.truncate(
                     slot, run_q[slot] + na + 1)
+        if self.adaptive_spec_k and step_drafted:
+            self._adapt_spec_k(step_accepted / step_drafted)
+
+    # EMA half-life of one drafting step; hysteresis band so k doesn't
+    # flap on a borderline drafter (one bucket move per step, at most)
+    _EMA_ALPHA = 0.5
+    _SHRINK_BELOW = 0.35
+    _GROW_ABOVE = 0.65
+
+    def _adapt_spec_k(self, frac: float) -> None:
+        """Fold one step's acceptance fraction into the EMA and move
+        ``spec_k_cur`` one bucket within {1, 2, 4, …, spec_k}."""
+        a = self._EMA_ALPHA
+        self._accept_ema = frac if self._accept_ema is None \
+            else (1 - a) * self._accept_ema + a * frac
+        i = self._k_buckets.index(self.spec_k_cur)
+        if self._accept_ema < self._SHRINK_BELOW and i > 0:
+            self.spec_k_cur = self._k_buckets[i - 1]
+        elif self._accept_ema > self._GROW_ABOVE \
+                and i + 1 < len(self._k_buckets):
+            self.spec_k_cur = self._k_buckets[i + 1]
 
     # ------------------------------------------------- one-shot decode step
     def _decode_once(self, events: list[tuple[int, int]]) -> None:

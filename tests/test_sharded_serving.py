@@ -1,0 +1,145 @@
+"""Mesh-sharded serving: greedy tensor-parallel streams must be
+token-identical to the single-device engine across the full feature
+matrix (chunked prefill × int8 KV pools × prefix sharing × ngram
+speculative decoding), per-device pool bytes must shrink linearly with
+the ``model`` axis, and indivisible head counts must fail at engine
+construction with a clear error.
+
+Runs in a SUBPROCESS with xla_force_host_platform_device_count=4 so the
+main pytest process keeps its single real device (same pattern as
+test_distributed / test_moe_sharded)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import json
+import jax
+import numpy as np
+import repro.configs as C
+from repro.distributed import serving_mesh
+from repro.models import build_model
+from repro.serving import GenerationEngine
+
+# Hkv = 4 divides both the 2- and 4-way mesh; the stock smoke config's
+# Hkv = 1 is the indivisible error-path fixture further down.
+cfg = dataclasses.replace(C.get_smoke_config("qwen25-05b"),
+                          num_heads=8, num_kv_heads=4, head_dim=16)
+m = build_model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+out = {"device_count": jax.device_count()}
+
+rng = np.random.default_rng(0)
+prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+prompts = [np.concatenate([prefix,
+                           rng.integers(0, cfg.vocab_size, (t,)
+                                        ).astype(np.int32)])
+           for t in (5, 12, 9, 3)]
+
+
+def serve(mesh, **kw):
+    eng = GenerationEngine(m, params, max_seq=64, num_slots=4, page_size=8,
+                           prefill_chunk=4, mesh=mesh, **kw)
+    rids = [eng.submit(p, 10, prefix_id="sys") for p in prompts]
+    streams = {}
+    while not eng.idle:
+        eng.step()
+    done = eng.collect()
+    streams = [[int(t) for t in done[r]] for r in rids]
+    st = eng.stats()
+    assert st.pager.pages_used == 0          # everything freed
+    return streams, st
+
+
+# --- full feature matrix: chunked × int8 × prefix sharing × ngram spec ---
+FULL = dict(kv_quant="int8", spec_decode="ngram", spec_k=4)
+ref, st_ref = serve(None, **FULL)
+out["ref_nonempty"] = all(len(s) == 10 for s in ref)
+out["spec_fired"] = st_ref.draft_tokens > 0
+out["prefix_fired"] = st_ref.prefix_shared_pages > 0
+out["bytes_per_dev"] = {}
+for size in (1, 2, 4):
+    got, st = serve(serving_mesh(size), **FULL)
+    out[f"identical_{size}"] = got == ref
+    out[f"model_axis_{size}"] = st.model_axis
+    out["bytes_per_dev"][str(size)] = st.kv_pool_bytes_per_device
+    if size == 1:
+        # the degenerate mesh must also match the unsharded byte layout
+        out["size1_bytes_match"] = (st.kv_pool_bytes_per_device
+                                    == st_ref.kv_pool_bytes_per_device)
+
+# --- bf16 pools, no speculation: the plain chunked path sharded ---------
+ref_plain, _ = serve(None)
+got_plain, _ = serve(serving_mesh(2))
+out["identical_plain_2"] = got_plain == ref_plain
+
+# --- error paths --------------------------------------------------------
+def err(fn):
+    try:
+        fn()
+        return ""
+    except ValueError as e:
+        return str(e)
+
+out["err_indivisible"] = err(lambda: GenerationEngine(
+    build_model(C.get_smoke_config("qwen25-05b")), params,
+    mesh=serving_mesh(2)))                       # Hkv = 1, axis 2
+out["err_no_model_axis"] = err(lambda: GenerationEngine(
+    m, params, mesh=jax.sharding.Mesh(
+        np.asarray(jax.devices()[:2]), ("data",))))
+def oneshot():
+    eng = GenerationEngine(m, params, max_seq=64, num_slots=2, page_size=8,
+                           chunked_prefill=False, mesh=serving_mesh(2))
+    eng.submit(prompts[0], 4)
+out["err_oneshot"] = err(oneshot)
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def result():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], cwd=".",
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_forced_multi_device_backend(result):
+    assert result["device_count"] == 4
+
+
+def test_sharded_streams_token_identical(result):
+    """Greedy sharded ≡ single-device across chunked prefill, int8 KV,
+    prefix sharing and ngram spec decode — for 2- and 4-way meshes and
+    the degenerate size-1 mesh."""
+    assert result["ref_nonempty"]
+    assert result["spec_fired"] and result["prefix_fired"]
+    for size in (1, 2, 4):
+        assert result[f"identical_{size}"], f"mesh size {size} diverged"
+        assert result[f"model_axis_{size}"] == size
+    assert result["identical_plain_2"]
+
+
+def test_per_device_pool_bytes_shrink_linearly(result):
+    b = {int(k): v for k, v in result["bytes_per_dev"].items()}
+    assert result["size1_bytes_match"]
+    assert b[2] == b[1] // 2
+    assert b[4] == b[1] // 4
+
+
+def test_construction_time_errors(result):
+    assert "num_kv_heads=1" in result["err_indivisible"]
+    assert "divisible" in result["err_indivisible"]
+    assert "'model' axis" in result["err_no_model_axis"]
+    assert "chunked" in result["err_oneshot"]

@@ -99,14 +99,14 @@ class _FakeSpecExec:
 
 
 def _spec_sched(draft, accept, num_slots=2, pages_per_slot=4, page_size=4,
-                chunk=4, k=3):
+                chunk=4, k=3, adaptive=False):
     ex = _FakeSpecExec(accept)
     pager = KVPager(PagerConfig(num_pages=num_slots * pages_per_slot + 1,
                                 page_size=page_size, num_slots=num_slots,
                                 pages_per_slot=pages_per_slot))
     sched = Scheduler(pager, run_batch=ex.run_batch, chunk_size=chunk,
                       spec_decode="draft_fn", spec_k=k,
-                      draft_fn=draft)
+                      adaptive_spec_k=adaptive, draft_fn=draft)
     return sched, ex
 
 
@@ -154,6 +154,79 @@ def test_fake_spec_draft_cap_near_budget_end():
     assert seen == [3]
     assert sched.pager.pages_in_use == 0
     _pager_invariants(sched.pager)
+
+
+def test_adaptive_spec_k_shrinks_to_one_then_grows_back():
+    """Forced full rejection drives the acceptance EMA to 0 and walks
+    spec_k down the bucket family to 1; forced full acceptance drives it
+    back up to spec_k_max — one bucket per step, never outside the
+    family."""
+    def draft(reqs):
+        return {slot: [7] * k for slot, _rid, _ctx, _q, k in reqs}
+
+    sched, ex = _spec_sched(draft, accept=0, k=4, pages_per_slot=16,
+                            page_size=4, adaptive=True)
+    assert sched._k_buckets == [1, 2, 4]
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=40))
+    sched.step()                              # prefill → first token
+    seen_k = []
+    for _ in range(4):                        # full-reject phase
+        seen_k.append(sched.spec_k_cur)
+        sched.step()
+    assert sched.spec_k_cur == 1              # 4 → 2 → 1, then floor
+    assert seen_k[0] == 4 and all(k in (1, 2, 4) for k in seen_k)
+    ex.accept = 99                            # full-accept phase
+    grown = []
+    while 0 not in sched.finished and not sched.idle:
+        sched.step()
+        grown.append(sched.spec_k_cur)
+    assert max(grown) == 4                    # 1 → 2 → 4 on acceptance
+    out = {**sched.finished, **sched.run()}
+    assert len(out[0]) == 40                  # exactly the budget
+    _pager_invariants(sched.pager)
+
+
+def test_adaptive_spec_k_engine_identity(model_and_params):
+    """Adaptive k under a real engine: a drafter that is wrong until k
+    bottoms out at 1 and oracle-right afterwards leaves the greedy
+    stream token-identical to sequential decode, while k round-trips
+    4 → 1 → 4."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6,), seed=12)
+    eng0 = _engine(m, params)
+    refs = _refs(eng0, prompts, 24)
+    oracle = {}
+    state = {"eng": None}
+
+    def draft(reqs):
+        out = {}
+        sched = state["eng"]._scheduler
+        for slot, rid, ctx, _q, k in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen
+            nxt = [int(t) for t in ref[done:done + k]]
+            if sched.spec_k_cur > 1 and min(state["ks"]) > 1:
+                nxt = [(t + 1) % cfg.vocab_size for t in nxt]  # all wrong
+            out[slot] = nxt
+        return out
+
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  spec_adaptive=True, draft_fn=draft)
+    state["eng"] = eng
+    state["ks"] = [4]
+    rid = eng.submit(prompts[0], 24)
+    oracle[rid] = (refs[0], len(prompts[0]))
+    while not eng.idle:
+        eng.step()
+        state["ks"].append(eng._scheduler.spec_k_cur)
+    out = eng.collect()
+    assert min(state["ks"]) == 1              # rejection drove k to 1
+    assert state["ks"][-1] == 4 or max(
+        state["ks"][state["ks"].index(1):]) == 4   # …and acceptance back up
+    np.testing.assert_array_equal(out[rid], refs[0])
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
 
 
 def test_fake_spec_full_acceptance_width_and_eos_mid_run():

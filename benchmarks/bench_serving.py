@@ -72,6 +72,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import pathlib
 import sys
 import time
 
@@ -88,7 +90,7 @@ from repro.serving import GenerationEngine
 # section that is skipped (or crashes) leaves its key missing, and
 # `main` exits non-zero either way
 REQUIRED_IDENTITY = ("chunked_vs_oneshot_vs_generate", "spec_vs_plain",
-                     "sharded_vs_unsharded")
+                     "sharded_vs_unsharded", "awq_kernel_vs_ref")
 
 NUM_REQUESTS = 16
 NUM_SLOTS = 4
@@ -576,6 +578,137 @@ def run_sharded(csv_rows, identity):
             "bytes_per_device": bytes_per_dev}
 
 
+# ---------------------------------------------------------------------------
+# Compression × speed: the AWQ W4 weight stream through the serving grid
+# ---------------------------------------------------------------------------
+
+AWQ_FEATURES = {
+    "plain": {},
+    "int8": {"kv_quant": "int8"},
+    "prefix": {},                       # prefix_id at submit time
+    "spec": {"spec_decode": "ngram", "spec_k": SPEC_K},
+}
+AWQ_SMOKE_FEATURES = ("plain", "spec")
+
+
+def run_awq(m, params, csv_rows, identity, smoke=False):
+    """Float vs AWQ-W4 params through the serving feature grid.
+
+    Three parts, all through the PUBLIC engine API:
+
+      * **identity battery** — the quantized engine streams greedy tokens
+        under the Pallas kernel (interpret mode) and under the pure-jnp
+        ``ref`` oracle through the FULL feature stack (chunked + int8 KV +
+        prefix sharing + ngram spec); the comparison registers as a gated
+        identity section.
+      * **weight-stream accounting** — ``stats().weight_bytes_per_token``
+        for float vs packed params: the bytes one decode step streams per
+        emitted token, the quantity the paper's INT4 compression targets
+        (reported next to the KV bytes/token column `run_kv_quant` owns).
+      * **ms-per-token grid** — float vs AWQ × feature cells, separate
+        prefill and decode probes (untimed compile pass first, engine
+        reused so only the probes are timed). Off-TPU the AWQ cells run
+        the jnp dequant oracle — the grid is then a correctness-shaped
+        cost model; the kernel regime needs a TPU backend.
+    """
+    import jax.numpy as jnp
+
+    import repro.core.qlinear as Q
+    from repro.core import quantize_params
+    cfg = m.cfg
+    qp, report = quantize_params(params)
+    assert report.quantized, "config has no quantizable linears"
+
+    # --- identity battery: Pallas kernel vs jnp oracle, full stack -------
+    rng = np.random.default_rng(19)
+    id_prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    id_prompts = [np.concatenate([id_prefix,
+                                  rng.integers(0, cfg.vocab_size, (t,)
+                                               ).astype(np.int32)])
+                  for t in (5, 12, 9, 3)]
+
+    def _streams(impl):
+        Q.set_execution_config(impl=impl, compute_dtype=jnp.float32)
+        eng = _fresh_engine(m, qp, max_seq=64, num_slots=4, page_size=8,
+                            prefill_chunk=4, kv_quant="int8",
+                            spec_decode="ngram", spec_k=SPEC_K)
+        rids = [eng.submit(p, 10, prefix_id="sys") for p in id_prompts]
+        out = eng.drain()
+        return [list(out[r]) for r in rids]
+
+    prev = Q.get_execution_config()
+    try:
+        identical = _streams("ref") == _streams("kernel_interpret")
+    finally:
+        Q._EXEC = prev
+    identity["awq_kernel_vs_ref"] = identical
+    csv_rows.append(("serving/awq_token_identity", str(identical),
+                     "AWQ kernel ≡ jnp ref through chunked+int8+prefix+spec"))
+
+    # --- weight stream accounting ----------------------------------------
+    wb = {}
+    for tag, pp in (("float", params), ("awq", qp)):
+        st = _fresh_engine(m, pp).stats()
+        wb[tag] = st.weight_bytes
+        csv_rows.append(
+            (f"serving/weight_bytes_per_token_{tag}",
+             f"{st.weight_bytes_per_token:.0f}",
+             "weight bytes streamed per decoded token "
+             "(whole model per step until spec amortizes it)"))
+    csv_rows.append(
+        ("serving/awq_weight_bytes_reduction",
+         f"{1 - wb['awq'] / wb['float']:.1%}",
+         f"{wb['float']} -> {wb['awq']} model bytes"))
+
+    # --- compression × speed grid -----------------------------------------
+    feats = AWQ_SMOKE_FEATURES if smoke else tuple(AWQ_FEATURES)
+    prefill_len = 24 if smoke else 64
+    decode_new = 8 if smoke else 24
+    n_req = 2 if smoke else 4
+    grid = {}
+    for ptag, pp in (("float", params), ("awq", qp)):
+        for feat in feats:
+            rng = np.random.default_rng(23)
+            if feat == "spec":
+                pat = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+                short = [np.tile(pat, 2) for _ in range(n_req)]
+            else:
+                short = [rng.integers(0, cfg.vocab_size, (8,)
+                                      ).astype(np.int32)
+                         for _ in range(n_req)]
+            pref = rng.integers(0, cfg.vocab_size, (prefill_len - 8,)
+                                ).astype(np.int32)
+            long_ = [np.concatenate([pref,
+                                     rng.integers(0, cfg.vocab_size, (8,)
+                                                  ).astype(np.int32)])
+                     for _ in range(n_req)]
+            pid = "sys" if feat == "prefix" else None
+            eng = _fresh_engine(m, pp, **AWQ_FEATURES[feat])
+
+            def _drain(prompts, new, prefix_id=None):
+                for p in prompts:
+                    eng.submit(p, new, prefix_id=prefix_id)
+                t0 = time.perf_counter()
+                eng.drain()
+                return time.perf_counter() - t0
+
+            _drain(long_, 1, pid)               # untimed: compiles, and for
+            _drain(short, decode_new)           # "prefix" registers the pages
+            pre_ms = _drain(long_, 1, pid) * 1e3 / (n_req * prefill_len)
+            dec_ms = _drain(short, decode_new) * 1e3 / (n_req * decode_new)
+            grid[f"{ptag}/{feat}"] = {"prefill_ms_per_tok": pre_ms,
+                                      "decode_ms_per_tok": dec_ms}
+            csv_rows.extend([
+                (f"serving/awq_grid_{ptag}_{feat}_prefill_ms_per_tok",
+                 f"{pre_ms:.2f}",
+                 f"{n_req} reqs x {prefill_len}-token prompts"),
+                (f"serving/awq_grid_{ptag}_{feat}_decode_ms_per_tok",
+                 f"{dec_ms:.2f}",
+                 f"{n_req} reqs x {decode_new} new tokens"),
+            ])
+    return {"identical": identical, "weight_bytes": wb, "grid": grid}
+
+
 def run(csv_rows: list, smoke: bool = False) -> dict:
     cfg = C.get_smoke_config("qwen25-05b")
     m = build_model(cfg)
@@ -599,6 +732,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         spec = run_spec(m, params, csv_rows, identity, num_requests=4,
                         new_tokens=12, tag_prefix="serving/smoke_spec")
         sharded = run_sharded(csv_rows, identity)
+        awq = run_awq(m, params, csv_rows, identity, smoke=True)
         csv_rows.extend([
             ("serving/smoke_sustained_tps", f"{r['useful'] / r['dt']:.1f}",
              f"{r['useful']} tokens, {r['steps']} unified dispatches"),
@@ -608,7 +742,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
              "chunked ≡ one-shot ≡ generate()"),
         ])
         return {"token_identical": identical, "spec": spec,
-                "padding": pack, "sharded": sharded,
+                "padding": pack, "sharded": sharded, "awq": awq,
                 "identity_sections": identity, **kv, **prefix}
 
     workload = make_workload(cfg)
@@ -624,6 +758,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     prefix = run_prefix_sharing(m, params, csv_rows)
     spec = run_spec(m, params, csv_rows, identity)
     sharded = run_sharded(csv_rows, identity)
+    awq = run_awq(m, params, csv_rows, identity)
 
     s_tps, c_tps = su / sdt, cu / cdt
     rows = [
@@ -651,7 +786,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             "continuous_p95": float(np.percentile(cl, 95)),
             "ttft_p95": float(np.percentile(ct, 95)),
             "token_identical": identical, "spec": spec, "padding": pack,
-            "sharded": sharded, "identity_sections": identity,
+            "sharded": sharded, "awq": awq, "identity_sections": identity,
             **convoy, **kv, **prefix}
 
 
@@ -659,11 +794,37 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced run for the tier-1 gate")
+    ap.add_argument("--history-file", default=None,
+                    help="tracked run-history JSON (default: repo-root "
+                         "BENCH_serving.json); every run appends a record")
     args = ap.parse_args()
     rows: list = []
     out = run(rows, smoke=args.smoke)
     for r in rows:
         print(",".join(str(x) for x in r))
+    # tracked history: append a schema'd record BEFORE any gate can exit,
+    # so failed runs leave evidence too (run_tier1 gates on this file)
+    hist_path = pathlib.Path(args.history_file) if args.history_file else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+    record = {
+        "schema": 1,
+        "timestamp": time.time(),
+        "smoke": bool(args.smoke),
+        "jax_devices": jax.device_count(),
+        "metrics": {name: value for name, value, _ in rows},
+        "identity_sections": out.get("identity_sections", {}),
+        "awq": {"weight_bytes": out["awq"]["weight_bytes"],
+                "grid": out["awq"]["grid"]},
+    }
+    try:
+        history = json.loads(hist_path.read_text())
+    except (FileNotFoundError, json.JSONDecodeError):
+        history = []
+    if not isinstance(history, list):
+        history = []
+    history.append(record)
+    hist_path.write_text(json.dumps(history, indent=1) + "\n")
+    print(f"HISTORY appended to {hist_path} ({len(history)} records)")
     # the skip guard: every asserted identity section must have RUN and
     # passed — a section that was silently skipped leaves its key missing,
     # which fails the gate just like a mismatch would
@@ -700,6 +861,9 @@ if __name__ == "__main__":
         <= out["spec"]["spec"]["drafted"]
     # run-length packing can only remove padding vs the fixed-width policy
     assert out["padding"]["waste"] <= out["padding"]["waste_fixed"] + 1e-9
+    # the packed weight stream must actually be smaller than the float one
+    assert out["awq"]["weight_bytes"]["awq"] \
+        < out["awq"]["weight_bytes"]["float"]
     if not args.smoke:
         # the headline claims: sharing saves FLOPs (not just memory),
         # TTFT p95 beats the one-shot baseline on the shared-prefix

@@ -94,7 +94,7 @@ fi
 # (engine + scheduler + pager + kernels fallback) through the benchmark's
 # reduced mode; asserts token identity and prefix-FLOP accounting
 bench_rc=0
-if timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+if timeout "${TIER1_BENCH_TIMEOUT:-600}" \
         python benchmarks/bench_serving.py --smoke \
         >"$RESULTS_DIR/bench_serving_smoke.log" 2>&1; then
     echo "BENCH-SMOKE: ok ($(grep -c '^serving/' \
@@ -103,6 +103,34 @@ else
     bench_rc=1
     echo "BENCH-SMOKE: FAILED (see $RESULTS_DIR/bench_serving_smoke.log)"
     tail -5 "$RESULTS_DIR/bench_serving_smoke.log"
+fi
+
+# --- bench history gate: the smoke run must have appended a parseable,
+# schema'd record to the tracked BENCH_serving.json run history
+if [ "$bench_rc" -eq 0 ]; then
+    python - <<'PY'
+import json
+import sys
+
+try:
+    hist = json.load(open("BENCH_serving.json"))
+except Exception as e:  # missing or unparseable both gate red
+    print(f"BENCH-HISTORY: unreadable ({e})")
+    sys.exit(1)
+if not (isinstance(hist, list) and hist):
+    print("BENCH-HISTORY: empty or not a record list")
+    sys.exit(1)
+rec = hist[-1]
+need = ("schema", "timestamp", "smoke", "metrics", "identity_sections",
+        "awq")
+missing = [k for k in need if k not in rec]
+if missing:
+    print(f"BENCH-HISTORY: last record missing keys {missing}")
+    sys.exit(1)
+print(f"BENCH-HISTORY: ok ({len(hist)} records, "
+      f"last smoke={rec['smoke']} schema={rec['schema']})")
+PY
+    bench_rc=$?
 fi
 
 timeouts=0

@@ -2,6 +2,7 @@ from repro.core.awq import AWQConfig, search_awq_scale  # noqa: F401
 from repro.core.calibration import CalibrationCapture  # noqa: F401
 from repro.core.packing import PackedLinear, pack_int4, unpack_int4  # noqa: F401
 from repro.core.pipeline import quantize_params, model_size_bytes  # noqa: F401
-from repro.core.qlinear import (ExecutionConfig, get_execution_config,  # noqa: F401
-                                qlinear_apply, set_execution_config)
+from repro.core.qlinear import (ExecutionConfig, execution_config,  # noqa: F401
+                                get_execution_config, qlinear_apply,
+                                set_execution_config)
 from repro.core.quantize import QuantConfig, quantize_groupwise  # noqa: F401

@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core.awq import AWQConfig, search_awq_scale
 from repro.core.calibration import LinearStats
-from repro.core.packing import (PackedLinear, pack_linear,
+from repro.core.packing import (PACK, PackedLinear, pack_linear,
                                 packed_linear_nbytes)
 from repro.core.quantize import QuantConfig, quantize_groupwise
 
@@ -68,7 +68,9 @@ def _quantizable(path: str, node: dict, qcfg: QuantConfig,
     k, n = w.shape[-2], w.shape[-1]
     if any(e in path.lower() for e in exclude):
         return False
-    if k % qcfg.group_size or n % 8:
+    # N must tile into AWQ macros, whose channel width equals the int4
+    # pack width along K (core/packing.PACK) — one source of truth.
+    if k % qcfg.group_size or n % PACK:
         return False
     return k * n >= 16384  # skip tiny projections (paper keeps them on CPU)
 
@@ -140,7 +142,7 @@ def quantize_params(params: Any,
                 from repro.core.packing import pack_int4
                 packed = PackedLinear(
                     qweight=jnp.stack([pack_int4(q) for q in qs]).reshape(
-                        *lead, k // 8, n),
+                        *lead, k // PACK, n),
                     scales=jnp.stack(ss).reshape(*lead, k // cfg.quant.group_size, n),
                     zeros=jnp.stack(zs).astype(jnp.int8).reshape(
                         *lead, k // cfg.quant.group_size, n),

@@ -21,6 +21,7 @@ launch overhead is not worth it on either platform).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -29,9 +30,18 @@ import jax.numpy as jnp
 from repro.core.packing import PackedLinear, dequantize_packed
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ExecutionConfig:
-    """Global runtime knobs for the quantized path."""
+    """Runtime knobs for the quantized path.
+
+    Frozen/hashable on purpose: the config is read at TRACE time, so a
+    compiled function bakes in whatever was active when it was traced.
+    Callers that jit must therefore treat the config as part of the
+    compilation key — `serving.GenerationEngine` keys every compiled
+    dispatch on the active config (so `set_execution_config` takes
+    effect on the next step, triggering a retrace), and one-off callers
+    can pass ``cfg=`` to `qlinear_apply` explicitly.
+    """
 
     impl: str = "auto"              # "auto" | "ref" | "kernel" | "kernel_interpret"
     compute_dtype: jnp.dtype = jnp.bfloat16
@@ -51,6 +61,22 @@ def get_execution_config() -> ExecutionConfig:
     return _EXEC
 
 
+@contextlib.contextmanager
+def execution_config(cfg: ExecutionConfig):
+    """Pin the ambient execution config for the duration of the block.
+
+    Trace-scoped: wrap the *tracing* of a jitted function so every
+    `qlinear_apply` inside it sees ``cfg`` instead of the mutable global
+    (which a finished trace would otherwise have captured silently).
+    """
+    global _EXEC
+    prev, _EXEC = _EXEC, cfg
+    try:
+        yield cfg
+    finally:
+        _EXEC = prev
+
+
 def _resolve_impl(impl: str) -> str:
     if impl != "auto":
         return impl
@@ -59,12 +85,14 @@ def _resolve_impl(impl: str) -> str:
 
 
 def qlinear_apply(p: PackedLinear, x: jax.Array,
-                  impl: str | None = None) -> jax.Array:
+                  impl: str | None = None,
+                  cfg: ExecutionConfig | None = None) -> jax.Array:
     """``y = (x * input_scale) @ dequant(qweight) + bias``.
 
-    ``x``: [..., K]; returns [..., N] in x.dtype.
+    ``x``: [..., K]; returns [..., N] in x.dtype. ``cfg`` defaults to the
+    ambient config (see `execution_config` for the trace-time contract).
     """
-    cfg = _EXEC
+    cfg = cfg if cfg is not None else _EXEC
     impl = _resolve_impl(impl or cfg.impl)
     orig_dtype = x.dtype
     lead = x.shape[:-1]

@@ -195,9 +195,14 @@ def param_pspec(path: str, leaf: Any, mesh: Mesh, cfg=None) -> P:
             # Quantized row-parallel linear: each K-shard must hold WHOLE
             # dequant groups (the AWQ_MACRO invariant), or the group-reshape
             # un-shards the weight and XLA gathers it every step (§Perf A2).
-            # rows → K: qweight packs 8/row, scales/zeros are per-group.
-            gs = 64
-            k_full = shape[-2] * (8 if leafname == "qweight" else gs)
+            # rows → K: qweight packs PACK/row, scales/zeros are per-group.
+            # The group size comes from the quant config (cfg override or
+            # the pipeline default), not a magic literal.
+            from repro.core.packing import PACK
+            from repro.core.quantize import QuantConfig
+            gs = (getattr(cfg, "quant_group_size", None)
+                  or QuantConfig().group_size)
+            k_full = shape[-2] * (PACK if leafname == "qweight" else gs)
             if (k_full // msize) % gs != 0:
                 # flip to column-parallel (tiny output all-gather instead)
                 k_ax = None

@@ -34,15 +34,25 @@ def choose_blocks(m: int, k: int, n: int, group_size: int,
     * block_k must be a multiple of the dequant group (metadata travels with
       its weights — the AWQ_MACRO invariant) and divide K.
     * block_n multiples of 128 keep the MXU lane dimension full.
-    * block_m: 8 for decode GEMV, up to 256 for prefill GEMM.
+    * block_m picks the schedule: ≤ 8 rows ride one 8-sublane block (the
+      decode GEMV regime — every weight block is streamed exactly once);
+      larger M gets a GEMM block up to 256. The serving scheduler emits
+      M = width · num_slots for every width in
+      ``scheduler.width_family(chunk, spec_k)`` ({1, 2, 4, …, chunk} plus
+      the k+1 spec-verify widths), so M is frequently NOT a multiple of 8
+      — those pad up to the next 8-sublane boundary and take it as one
+      block when ≤ 256 (single grid row) instead of degrading to bm=8.
     """
     block_k = _divisor_block(k, group_size, 1024)
     block_n = _divisor_block(n, 128, 512) if n % 128 == 0 else \
         _divisor_block(n, 8, 512)
     if m <= 8:
-        block_m = 8
+        block_m = 8                              # GEMV schedule
+    elif m % 8 == 0:
+        block_m = _divisor_block(m, 8, 256)      # GEMM, exact tiling
     else:
-        block_m = _divisor_block(m, 8, 256)
+        padded = -(-m // 8) * 8                  # GEMM over padded rows
+        block_m = padded if padded <= 256 else _divisor_block(padded, 8, 256)
     return block_m, block_n, block_k
 
 

@@ -122,6 +122,20 @@ def fill_mla_cache_from_prefill(cache, c, k_pe):
     return {"ckv": ck, "kpe": kp}
 
 
+def _packed_col_block(pl, heads: int, width: int, sl: slice):
+    """Per-head column block of a packed [r, heads*width] linear, WITHOUT
+    dequantizing: qweight/scales/zeros all carry N in their last axis, so
+    slicing output columns commutes with the K-dim int4 packing."""
+    from repro.core.packing import PackedLinear
+
+    def take(a):
+        a3 = a.reshape(a.shape[0], heads, width)[..., sl]
+        return a3.reshape(a.shape[0], -1)
+
+    return PackedLinear(take(pl.qweight), take(pl.scales), take(pl.zeros),
+                        pl.input_scale, None, pl.group_size)
+
+
 def mla_decode(p, cache, x, cfg, *, pos, name=None):
     """Absorbed single-token decode. x [B, D], pos [B] → (y, cache)."""
     b = x.shape[0]
@@ -138,16 +152,24 @@ def mla_decode(p, cache, x, cfg, *, pos, name=None):
 
     # Absorb W_UK into the query: q_abs[h, r] = q_nope[h, nope] · W_UK[r, h, nope]
     from repro.core.packing import PackedLinear, dequantize_packed
-    if isinstance(p["kv_up"], PackedLinear):
-        # Quantized serving: expand the (small) up-projection once per step;
-        # the scores/values stream stays in the compressed latent space.
-        # effective float weight = diag(input_scale) @ dequant(qweight)
-        w_up = dequantize_packed(p["kv_up"], jnp.float32)
-        w_up = w_up * p["kv_up"].input_scale[:, None]
+    pk = p["kv_up"]
+    if isinstance(pk, PackedLinear):
+        # Quantized serving: dequantize PER BLOCK at each use point — the
+        # W_UK columns here for query absorption, the W_UV columns only
+        # after attention — so peak live bytes are one block's dense
+        # weight (effective weight = diag(input_scale) @ dequant),
+        # never the full [r, h*(nope+vdim)] expansion.
+        def _up_block(sl, width):
+            blk = _packed_col_block(pk, h, nope + vdim, sl)
+            w = dequantize_packed(blk, jnp.float32) * pk.input_scale[:, None]
+            return w.reshape(r, h, width)
+
+        w_uk = _up_block(slice(None, nope), nope)
+        w_uv_fn = lambda: _up_block(slice(nope, None), vdim)  # noqa: E731
     else:
-        w_up = p["kv_up"]["w"]
-    w_up = w_up.reshape(r, h, nope + vdim)
-    w_uk, w_uv = w_up[..., :nope], w_up[..., nope:]
+        w_up = pk["w"].reshape(r, h, nope + vdim)
+        w_uk = w_up[..., :nope]
+        w_uv_fn = lambda: w_up[..., nope:]  # noqa: E731
     q_abs = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))
 
@@ -161,7 +183,7 @@ def mla_decode(p, cache, x, cfg, *, pos, name=None):
     scores = jnp.where((k_pos <= pos[:, None])[:, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))
-    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv_fn().astype(jnp.float32))
     out = out.reshape(b, h * vdim).astype(x.dtype)
     nm = (lambda s_: None) if name is None else name
     y = linear(p["wo"], out, nm("wo"))

@@ -61,7 +61,13 @@ def moe_init(key, cfg, dtype=jnp.float32):
 
 
 def _expert_weight(node, name: str) -> jax.Array:
-    """[E, K, N] float weights (dequantized if the experts are packed)."""
+    """[E, K, N] float weights — EAGER all-expert dequant if packed.
+
+    Only the data-parallel float dispatch still uses this (it replicates
+    float weights into the manual region). The packed hot paths go
+    through `_glu_ffn_packed` / the per-expert maps in `body_q`, which
+    keep one expert's dense weight live at a time.
+    """
     leaf = node[name]
     if isinstance(leaf, PackedLinear):
         e = leaf.qweight.shape[0]
@@ -73,18 +79,47 @@ def _expert_weight(node, name: str) -> jax.Array:
     return leaf["w"]
 
 
-def _dequant_stacked(q, s, z, cfg):
-    """[E, K//8, N] packed + [E, G, N] meta → [E, K, N] float (local)."""
+def _dequant_block(q, s, z):
+    """ONE [K//PACK, N] packed block + [G, N] meta → [K, N] f32."""
     from repro.core.packing import unpack_int4
-    e = q.shape[0]
-    kk = q.shape[1] * 8
-    n = q.shape[2]
-    gs = kk // s.shape[1]
-    qi = jax.vmap(unpack_int4)(q)                     # [E, K, N]
-    qg = qi.reshape(e, kk // gs, gs, n).astype(jnp.float32)
-    w = (qg - z[:, :, None, :].astype(jnp.float32)) \
-        * s[:, :, None, :].astype(jnp.float32)
-    return w.reshape(e, kk, n)
+    qi = unpack_int4(q).astype(jnp.float32)           # [K, N]
+    g, n = s.shape
+    qg = qi.reshape(g, qi.shape[0] // g, n)
+    w = (qg - z[:, None, :].astype(jnp.float32)) \
+        * s[:, None, :].astype(jnp.float32)
+    return w.reshape(qi.shape[0], n)
+
+
+def _glu_ffn(buf, wg, wu, wd, act):
+    """Batched expert GLU over the [E, C, D] capacity buffer (float)."""
+    h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
+    h = activation(act, h) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd.astype(buf.dtype))
+
+
+def _glu_ffn_packed(experts, buf, act):
+    """Expert GLU with PER-EXPERT lazy dequant.
+
+    ``lax.map`` (a sequential scan) dequantizes one expert inside each
+    iteration, so peak live weight bytes are ONE expert's dense [K, N] —
+    not the full [E, K, N] stack the eager path materialized, which
+    erased the W4 bandwidth win exactly on the decode hot path.
+    """
+    pg, pu, pd = experts["gate"], experts["up"], experts["down"]
+
+    def one(args):
+        b, g_, u_, d_ = args
+        wg = _dequant_block(*g_[:3]) * g_[3][:, None]
+        wu = _dequant_block(*u_[:3]) * u_[3][:, None]
+        wd = _dequant_block(*d_[:3]) * d_[3][:, None]
+        h = activation(act, b @ wg.astype(b.dtype)) * (b @ wu.astype(b.dtype))
+        return h @ wd.astype(b.dtype)
+
+    def leaves(pl):
+        return (pl.qweight, pl.scales, pl.zeros, pl.input_scale)
+
+    return jax.lax.map(one, (buf, leaves(pg), leaves(pu), leaves(pd)))
 
 
 def capacity(cfg, n_tokens: int) -> int:
@@ -119,12 +154,13 @@ def _dp_groups(n_tokens: int) -> int:
     return math.gcd(n_tokens, dp)
 
 
-def _dispatch_compute_combine(xt, idx, gates, wg, wu, wd, cfg, cap):
-    """Scatter → batched expert GLU → gather, over LOCAL tokens.
+def _dispatch_compute_combine(xt, idx, gates, ffn, cfg, cap):
+    """Scatter → expert FFN (``ffn(buf) -> out_buf``) → gather, LOCAL.
 
-    xt [T, D] (local tokens), idx/gates [T, k]. Expert weights may be
-    F-sharded (caller handles the partial-sum). Pure local computation —
-    no collective ops; designed to run inside `shard_map`.
+    xt [T, D] (local tokens), idx/gates [T, k]. ``ffn`` maps the
+    [E, C, D] capacity buffer to [E, C, D'] — `_glu_ffn` for float
+    stacks, `_glu_ffn_packed` for lazy per-expert dequant. Pure local
+    computation — no collective ops; designed to run inside `shard_map`.
     """
     t, d = xt.shape
     e, k = cfg.num_experts, cfg.top_k
@@ -144,10 +180,7 @@ def _dispatch_compute_combine(xt, idx, gates, wg, wu, wd, cfg, cap):
         slot_list.append(slot)
         keep_list.append(keep)
 
-    h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
-    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
-    h = activation(cfg.act, h) * u
-    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(buf.dtype))
+    out_buf = ffn(buf)
 
     y = jnp.zeros_like(xt)
     for j in range(k):
@@ -212,10 +245,6 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
 
             def body_q(xg_l, idx_l, gates_l, qg, sg, zg, isg, qu, su, zu,
                        isu, qd, sd, zd, isd):
-                # effective weight = diag(input_scale) @ dequant(qweight)
-                wg_l = _dequant_stacked(qg, sg, zg, cfg) * isg[:, :, None]
-                wu_l = _dequant_stacked(qu, su, zu, cfg) * isu[:, :, None]
-                wd_l = _dequant_stacked(qd, sd, zd, cfg) * isd[:, :, None]
                 xt_l, idx_ll, gates_ll = xg_l[0], idx_l[0], gates_l[0]
                 e = cfg.num_experts
                 buf = jnp.zeros((e, cap, d), xt_l.dtype)
@@ -235,12 +264,26 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
                     counts = counts + jnp.sum(onehot, axis=0)
                     slots.append(slot)
                     keeps.append(keep)
-                h = jnp.einsum("ecd,edf->ecf", buf, wg_l.astype(buf.dtype))
-                u = jnp.einsum("ecd,edf->ecf", buf, wu_l.astype(buf.dtype))
-                h = activation(cfg.act, h) * u                # [E,C,F/m]
+                # Per-expert lazy dequant: effective weight =
+                # diag(input_scale) @ dequant(qweight), one LOCAL expert
+                # shard live at a time (lax.map = sequential scan).
+                def gateup_one(args):
+                    b, g_, u_ = args
+                    wg_e = _dequant_block(*g_[:3]) * g_[3][:, None]
+                    wu_e = _dequant_block(*u_[:3]) * u_[3][:, None]
+                    return activation(cfg.act, b @ wg_e.astype(b.dtype)) \
+                        * (b @ wu_e.astype(b.dtype))
+                h = jax.lax.map(gateup_one,
+                                (buf, (qg, sg, zg, isg),
+                                 (qu, su, zu, isu)))          # [E,C,F/m]
                 h = jax.lax.all_gather(h, "model", axis=2, tiled=True)
-                out_buf = jnp.einsum("ecf,efd->ecd", h,
-                                     wd_l.astype(buf.dtype))  # [E,C,D/m]
+
+                def down_one(args):
+                    hh, d_ = args
+                    wd_e = _dequant_block(*d_[:3]) * d_[3][:, None]
+                    return hh @ wd_e.astype(hh.dtype)
+                out_buf = jax.lax.map(down_one,
+                                      (h, (qd, sd, zd, isd)))  # [E,C,D/m]
                 y_l = jnp.zeros((tg, out_buf.shape[-1]), xt_l.dtype)
                 for j in range(k):
                     got = out_buf[idx_ll[:, j], slots[j]]
@@ -270,8 +313,9 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
 
             def body(xg_l, idx_l, gates_l, wg_l, wu_l, wd_l):
                 y_l = _dispatch_compute_combine(
-                    xg_l[0], idx_l[0], gates_l[0], wg_l, wu_l, wd_l, cfg,
-                    cap)
+                    xg_l[0], idx_l[0], gates_l[0],
+                    lambda b: _glu_ffn(b, wg_l, wu_l, wd_l, cfg.act),
+                    cfg, cap)
                 if has_model:
                     y_l = jax.lax.psum(y_l, "model")  # row-parallel psum
                 return y_l[None]
@@ -285,12 +329,15 @@ def moe_apply(p, x: jax.Array, cfg, name=None) -> tuple[jax.Array, jax.Array]:
             )(xg, idx, gates, wg, wu, wd)
             y = y.reshape(t, d)
     else:
-        wg = _expert_weight(p["experts"], "gate")
-        wu = _expert_weight(p["experts"], "up")
-        wd = _expert_weight(p["experts"], "down")
         cap = capacity(cfg, t)
-        y = _dispatch_compute_combine(xt, idx_t, gates_t, wg, wu, wd, cfg,
-                                      cap)
+        if packed:
+            ffn = lambda b: _glu_ffn_packed(p["experts"], b, cfg.act)  # noqa: E731
+        else:
+            wg = _expert_weight(p["experts"], "gate")
+            wu = _expert_weight(p["experts"], "up")
+            wd = _expert_weight(p["experts"], "down")
+            ffn = lambda b: _glu_ffn(b, wg, wu, wd, cfg.act)  # noqa: E731
+        y = _dispatch_compute_combine(xt, idx_t, gates_t, ffn, cfg, cap)
 
     # shared experts (dense path over every token)
     if "shared" in p:

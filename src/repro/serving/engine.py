@@ -5,9 +5,16 @@ streamed to the accelerator, decoded token-by-token) grown into a serving
 subsystem:
 
   * `GenerationEngine(model, params)` — params may be float or AWQ-packed
-    (`core.pipeline.quantize_params` output); every linear dispatches
-    through `qlinear_apply`, so switching to the quantized model is a
-    params swap, no engine change.
+    (`core.pipeline.quantize_params` output). Every linear dispatches
+    through `qlinear_apply`, but a quantized swap is NOT engine-invisible;
+    the engine does two things to make it work: (a) every compiled
+    dispatch is keyed on the active `ExecutionConfig` (`qlinear_apply`
+    reads it at trace time, so without the keying a
+    `set_execution_config(...)` after the first step would be silently
+    ignored — flipping impl now retraces on the next step), and (b) under
+    a mesh the `PackedLinear` leaves (qweight/scales/zeros/input_scale)
+    shard through the same `param_pspec` rules as the float weight they
+    replace, keeping whole quant groups per device.
   * static batch — `generate` (host loop, EOS early-exit) and
     `generate_scan` (fixed-length `lax.scan`, the throughput-benchmark
     path). These are the baselines the serving benchmarks compare against.
@@ -108,6 +115,12 @@ class EngineStats:
     kv_pool_bytes: int            # global page-pool footprint, all layers
     kv_pool_bytes_per_device: int
     kv_bytes_per_token: float
+    # weight stream (the AWQ lever): resident bytes of the served params
+    # (PackedLinear leaves count int4 packing + metadata) and the bytes
+    # streamed per EMITTED token — one full weight pass per decode step,
+    # amortized over spec-accepted tokens per row when speculating.
+    weight_bytes: int
+    weight_bytes_per_token: float
 
 
 def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
@@ -185,9 +198,9 @@ class GenerationEngine:
         self.max_seq = max_seq or model.cfg.max_seq_len
         self.sampler = sampler
         self.eos_id = eos_id
-        self._prefill = jax.jit(model.prefill)
+        self._prefill = self._exec_jit(model.prefill)
         donate = (1,) if donate_cache else ()
-        self._step = jax.jit(self._decode_one, donate_argnums=donate)
+        self._step = self._exec_jit(self._decode_one, donate_argnums=donate)
         # streaming/continuous-batching state (built lazily on first submit)
         self.num_slots = num_slots
         self.page_size = page_size
@@ -335,13 +348,13 @@ class GenerationEngine:
         # one-shot path: one dispatch per admission fusing prefill + page
         # commit + first sample (start_page static: commit skips the
         # aliased shared-prefix pages), jit per prompt length
-        self._prefill_fused = jax.jit(self._prefill_commit_fn,
-                                      donate_argnums=(1,),
-                                      static_argnums=(8,))
-        self._decode_paged = jax.jit(self._decode_paged_fn,
-                                     donate_argnums=(1,))
-        self._decode_greedy = jax.jit(self._decode_greedy_fn,
-                                      donate_argnums=(1,))
+        self._prefill_fused = self._exec_jit(self._prefill_commit_fn,
+                                             donate_argnums=(1,),
+                                             static_argnums=(8,))
+        self._decode_paged = self._exec_jit(self._decode_paged_fn,
+                                            donate_argnums=(1,))
+        self._decode_greedy = self._exec_jit(self._decode_greedy_fn,
+                                             donate_argnums=(1,))
         return Scheduler(pager, prefill_commit=self._exec_prefill_commit,
                          decode=self._exec_decode)
 
@@ -374,8 +387,42 @@ class GenerationEngine:
         self._params_run = jax.device_put(self.params, self._param_sh)
         self._paged_cache = jax.device_put(self._paged_cache, self._cache_sh)
 
+    @staticmethod
+    def _exec_jit(fn, **jit_kw):
+        """jit ``fn`` keyed on the ACTIVE `core.qlinear.ExecutionConfig`.
+
+        `qlinear_apply` reads the execution config at trace time, so a
+        plain ``jax.jit`` would bake in whatever was set at the first call
+        and silently ignore every later `set_execution_config(...)`.
+        Every call instead looks up (or traces) a compiled instance for
+        the config active *now* — flipping impl/compute_dtype retraces on
+        the very next step, with the config pinned for the whole trace via
+        the `execution_config` context manager.
+        """
+        from repro.core.qlinear import execution_config, get_execution_config
+        cache: dict = {}
+
+        def call(*args):
+            cfg = get_execution_config()
+            jitted = cache.get(cfg)
+            if jitted is None:
+                def traced(*a, _cfg=cfg):
+                    with execution_config(_cfg):
+                        return fn(*a)
+
+                jitted = jax.jit(traced, **jit_kw)
+                cache[cfg] = jitted
+            return jitted(*args)
+
+        # jax.jit's compiled-trace introspection, summed over the config
+        # instances (tests bound the compile family through this)
+        call._cache_size = lambda: sum(j._cache_size()
+                                       for j in cache.values())
+        return call
+
     def _jit_dispatch(self, fn, *, n_host: int, n_out: int):
-        """jit one serving dispatch (cache donated).
+        """jit one serving dispatch (cache donated), keyed on the active
+        execution config (`_exec_jit`).
 
         Under a mesh the function is traced with the mesh active (so the
         model's `constrain` calls resolve) and pinned with EXPLICIT in/out
@@ -383,10 +430,13 @@ class GenerationEngine:
         operands (page tables, token blocks, per-row metadata, PRNG keys)
         and every output but the cache replicated, and the cache's out
         sharding equal to its in sharding — the donated pool buffers
-        round-trip without resharding, step after step.
+        round-trip without resharding, step after step. The param
+        shardings cover `PackedLinear` leaves too (`param_pspec` addresses
+        them by leaf name), so the quantized model serves sharded through
+        the exact same dispatches.
         """
         if self._mesh is None:
-            return jax.jit(fn, donate_argnums=(1,))
+            return self._exec_jit(fn, donate_argnums=(1,))
         from repro.distributed.sharding import use_mesh
 
         def traced(*args):
@@ -395,8 +445,8 @@ class GenerationEngine:
 
         in_sh = (self._param_sh, self._cache_sh) + (self._repl_sh,) * n_host
         out_sh = (self._repl_sh,) * (n_out - 1) + (self._cache_sh,)
-        return jax.jit(traced, donate_argnums=(1,),
-                       in_shardings=in_sh, out_shardings=out_sh)
+        return self._exec_jit(traced, donate_argnums=(1,),
+                              in_shardings=in_sh, out_shardings=out_sh)
 
     def _prefill_commit_fn(self, params, cache, tokens, slot, pages,
                            temp, topk, key, start_page=0):
@@ -535,9 +585,10 @@ class GenerationEngine:
         self._draft_cache = self.draft_model.init_cache(self.num_slots,
                                                         self.max_seq)
         self._draft_rid: dict[int, int] = {}
-        self._draft_prefill = jax.jit(self._draft_prefill_fn,
-                                      donate_argnums=(1,))
-        self._draft_step = jax.jit(self._draft_step_fn, donate_argnums=(1,))
+        self._draft_prefill = self._exec_jit(self._draft_prefill_fn,
+                                             donate_argnums=(1,))
+        self._draft_step = self._exec_jit(self._draft_step_fn,
+                                          donate_argnums=(1,))
 
     def _draft_prefill_fn(self, params, dcache, tokens, slot):
         """tokens [1, S] → draft cache with slot's rows 0..S-1 rewritten.
@@ -898,7 +949,10 @@ class GenerationEngine:
             model_axis=model_axis,
             kv_pool_bytes=pool_total,
             kv_pool_bytes_per_device=pool_per_dev,
-            kv_bytes_per_token=self.paged_kv_bytes_per_token())
+            kv_bytes_per_token=self.paged_kv_bytes_per_token(),
+            weight_bytes=self.weight_stream_bytes(),
+            weight_bytes_per_token=self.weight_bytes_per_token(
+                st.spec_tokens_per_row))
 
     def reset_stats(self) -> None:
         """Zero the cumulative counters behind `stats()` (occupancy and
@@ -941,13 +995,29 @@ class GenerationEngine:
         """KV bytes per cached token in the page pools (all layers)."""
         return self.paged_kv_page_bytes() / self.page_size
 
+    def weight_stream_bytes(self) -> int:
+        """Resident bytes of the served params — what ONE decode step
+        streams through the matmul units. `PackedLinear` leaves count
+        their int4 packing plus scales/zeros/input_scale metadata, so for
+        the quantized model this is the paper's ~3.6× compression lever
+        on the decode roofline."""
+        from repro.utils.tree import leaf_bytes
+        return leaf_bytes(self.params)
+
+    def weight_bytes_per_token(self, spec_tokens_per_row: float = 0.0
+                               ) -> float:
+        """Weight bytes streamed per EMITTED token: the full weight pass,
+        amortized over the tokens each decode row emits per dispatch
+        (> 1 only under speculative decoding)."""
+        return self.weight_stream_bytes() / max(spec_tokens_per_row, 1.0)
+
     def generate_scan(self, batch: dict, max_new_tokens: int, key=None):
         """Fixed-length scan generation (benchmark path, single dispatch)."""
         key = key if key is not None else jax.random.PRNGKey(0)
         b = next(iter(batch.values())).shape[0]
         cache = self.model.init_cache(b, self.max_seq)
 
-        @jax.jit
+        @self._exec_jit
         def run(params, batch, cache, key):
             cache, logits, pos = self.model.prefill(params, batch, cache)
             tok0 = sample(logits, self.sampler, key)

@@ -1,0 +1,118 @@
+"""`set_execution_config` must take effect AFTER the engine compiled.
+
+Regression for the trace-time-global bug: `qlinear_apply` reads the
+execution config when a dispatch is TRACED, so a plain ``jax.jit`` baked
+in whatever was active at the first call and silently ignored every
+later flip. The engine now keys every compiled dispatch on the active
+config (`GenerationEngine._exec_jit`) — flipping ``impl`` retraces on
+the next step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core import quantize_params
+from repro.core.qlinear import (ExecutionConfig, qlinear_apply,
+                                set_execution_config)
+from repro.kernels import ops as kops
+from repro.models import build_model
+from repro.serving import GenerationEngine
+
+
+@pytest.fixture(autouse=True)
+def _restore_exec_config():
+    import repro.core.qlinear as Q
+    prev = Q.get_execution_config()
+    yield
+    Q._EXEC = prev
+
+
+@pytest.fixture(scope="module")
+def quantized_model():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    qp, report = quantize_params(params)
+    assert report.quantized, "smoke config must have quantizable linears"
+    return cfg, m, qp
+
+
+def _drain(eng, prompt, new_tokens=6):
+    rid = eng.submit(prompt, new_tokens)
+    while not eng.idle:
+        eng.step()
+    return [int(t) for t in eng.collect()[rid]]
+
+
+def _count_kernel_calls(monkeypatch, calls):
+    orig = kops.awq_matmul
+
+    def counting(*a, **kw):
+        calls.append(kw.get("interpret"))
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(kops, "awq_matmul", counting)
+
+
+def test_flip_impl_after_compile_chunked(monkeypatch, quantized_model):
+    """The chunked serving dispatches observe a post-compile impl flip."""
+    cfg, m, qp = quantized_model
+    set_execution_config(impl="ref", compute_dtype=jnp.float32)
+    eng = GenerationEngine(m, qp, max_seq=32, num_slots=2, page_size=8,
+                           prefill_chunk=4)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (6,)).astype(np.int32)
+    ref_stream = _drain(eng, prompt)          # compiles with impl="ref"
+    assert len(ref_stream) == 6
+
+    calls = []
+    _count_kernel_calls(monkeypatch, calls)
+    assert _drain(eng, prompt) == ref_stream  # still ref: kernel untouched
+    assert calls == []
+
+    set_execution_config(impl="kernel_interpret")
+    kernel_stream = _drain(eng, prompt)       # ALREADY-compiled engine
+    assert calls, "impl flip after compile was silently ignored"
+    assert all(calls), "kernel_interpret must request interpret mode"
+    assert kernel_stream == ref_stream        # greedy identity across impls
+
+    calls.clear()
+    set_execution_config(impl="ref")
+    assert _drain(eng, prompt) == ref_stream  # flip back: kernel idle again
+    assert calls == []
+
+
+def test_flip_impl_after_compile_oneshot(monkeypatch, quantized_model):
+    """The one-shot (non-chunked) path threads the config too."""
+    cfg, m, qp = quantized_model
+    set_execution_config(impl="ref", compute_dtype=jnp.float32)
+    eng = GenerationEngine(m, qp, max_seq=32, num_slots=2, page_size=8,
+                           chunked_prefill=False)
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (5,)).astype(np.int32)
+    ref_stream = _drain(eng, prompt)
+
+    calls = []
+    _count_kernel_calls(monkeypatch, calls)
+    set_execution_config(impl="kernel_interpret")
+    assert _drain(eng, prompt) == ref_stream
+    assert calls, "one-shot dispatches ignored the impl flip"
+
+
+def test_qlinear_apply_explicit_cfg():
+    """``cfg=`` bypasses the ambient global entirely (jit-static use)."""
+    from repro.core.packing import pack_linear
+    from repro.core.quantize import QuantConfig, quantize_groupwise
+    qc = QuantConfig(group_size=64)
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, 64)) * 0.1
+    q, s, z = quantize_groupwise(w, qc)
+    p = pack_linear(q, s, z, jnp.ones((128,), jnp.float32), None, qc)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 128))
+    y_ref = qlinear_apply(p, x, cfg=ExecutionConfig(
+        impl="ref", compute_dtype=jnp.float32))
+    y_ker = qlinear_apply(p, x, cfg=ExecutionConfig(
+        impl="kernel_interpret", compute_dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ker),
+                               rtol=2e-5, atol=2e-5)

@@ -73,6 +73,56 @@ def test_choose_blocks_invariants():
         assert vmem < 8 * 2 ** 20
 
 
+def test_scheduler_emitted_block_shapes_match_ref():
+    """Every M the serving scheduler can emit — width · num_slots for
+    width in ``width_family(chunk, spec_k)`` ({1, 2, 4, …, chunk} plus
+    the k+1 spec-verify widths) — through the wrapper vs the jnp oracle:
+    GEMV (m ≤ 8), exact GEMM tiling, and padded odd widths."""
+    from repro.serving.scheduler import width_family
+    k, n, gs = 256, 384, 64
+    p = _packed(k, n, gs, seed=5)
+    widths = width_family(16, 4)
+    assert 5 in widths            # the spec_k + 1 verify-run width
+    for num_slots in (1, 4):
+        for c in widths:
+            m = c * num_slots
+            x = jax.random.normal(jax.random.PRNGKey(100 + m), (m, k))
+            ref = awq_matmul_ref(x, p.qweight, p.scales, p.zeros, gs)
+            out = awq_matmul(x, p, compute_dtype=jnp.float32,
+                             interpret=True)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_scheduler_emitted_shapes_gateup():
+    """The fused gate/up kernel over the same scheduler-emitted widths."""
+    from repro.serving.scheduler import width_family
+    k, n, gs = 256, 384, 64
+    g = _packed(k, n, gs, seed=6)
+    u = _packed(k, n, gs, seed=7)
+    for c in width_family(16, 4):
+        m = c * 4
+        x = jax.random.normal(jax.random.PRNGKey(200 + m), (m, k))
+        ref = awq_gateup_ref(x, g.qweight, g.scales, g.zeros, u.qweight,
+                             u.scales, u.zeros, gs)
+        out = awq_gateup(x, g, u, compute_dtype=jnp.float32, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_choose_blocks_padded_rows():
+    """Non-8-multiple M (spec verify rows, odd slot counts) pads to ONE
+    GEMM block when ≤ 256 instead of degrading to an 8-row grid walk."""
+    for m in (12, 20, 33, 100, 300):
+        bm, _, _ = choose_blocks(m, 896, 4864, 64)
+        padded = -(-m // 8) * 8
+        assert bm % 8 == 0
+        if padded <= 256:
+            assert bm == max(padded, 8), (m, bm)
+        else:
+            assert padded % bm == 0, (m, bm)
+
+
 def test_kernel_grid_covers_multiple_k_blocks():
     # K = 2048 with bk ≤ 1024 forces accumulation across the K grid axis
     p = _packed(2048, 128, 64, scale=0.05)

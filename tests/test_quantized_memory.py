@@ -1,0 +1,120 @@
+"""Quantized MoE / MLA apply must dequantize lazily, never materializing
+the full dense weight stack (the W4 bandwidth win on the decode path).
+
+Two assertions per path:
+  * jaxpr-level — no intermediate with the full dense-stack shape exists
+    anywhere in the lowered program (the eager bug produced an
+    ``[E, K, N]`` f32 stack / the full MLA up-projection every step);
+  * peak live bytes — when the backend reports a compiled memory
+    analysis, the lazy program's temp bytes must not exceed an
+    eagerly-dequantizing reference of the same computation.
+Plus allclose vs the eager oracle, so laziness never changes the math.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.core import PackedLinear, quantize_params
+from repro.core.packing import dequantize_packed
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+
+
+def _all_avals(jaxpr):
+    """Every intermediate aval, recursing into nested jaxprs (scan/map)."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            yield v.aval
+        for val in eqn.params.values():
+            yield from _sub(val)
+
+
+def _sub(val):
+    if hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):  # ClosedJaxpr
+        yield from _all_avals(val.jaxpr)
+    elif hasattr(val, "eqns"):                                # Jaxpr
+        yield from _all_avals(val)
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _sub(v)
+
+
+def _assert_no_shape(jaxpr, forbidden: set):
+    hits = [a for a in _all_avals(jaxpr)
+            if getattr(a, "shape", None) in forbidden]
+    assert not hits, f"full dense weight materialized: {hits[:3]}"
+
+
+def _temp_bytes(fn, *args):
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return int(getattr(ma, "temp_size_in_bytes", 0) or 0)
+    except Exception:
+        return 0
+
+
+def test_moe_packed_never_materializes_expert_stack():
+    cfg = C.get_smoke_config("qwen2-moe-a2.7b")
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    qp, rep = quantize_params(p)
+    assert isinstance(qp["experts"]["gate"], PackedLinear)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+
+    def lazy(pp, xx):
+        return moe_mod.moe_apply(pp, xx, cfg)[0]
+
+    def eager(pp, xx):
+        dense = dict(pp)
+        dense["experts"] = {
+            n: {"w": moe_mod._expert_weight(pp["experts"], n)}
+            for n in ("gate", "up", "down")}
+        return moe_mod.moe_apply(dense, xx, cfg)[0]
+
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    _assert_no_shape(jax.make_jaxpr(lazy)(qp, x).jaxpr,
+                     {(e, d, f), (e, f, d)})
+
+    y_lazy = lazy(qp, x)
+    y_eager = eager(qp, x)
+    np.testing.assert_allclose(np.asarray(y_lazy), np.asarray(y_eager),
+                               rtol=2e-5, atol=2e-5)
+
+    t_lazy, t_eager = _temp_bytes(lazy, qp, x), _temp_bytes(eager, qp, x)
+    if t_lazy and t_eager:
+        assert t_lazy <= t_eager, (t_lazy, t_eager)
+
+
+def test_mla_packed_dequantizes_per_block():
+    cfg = C.get_smoke_config("deepseek-v2-lite-16b")
+    p = mla_mod.mla_init(jax.random.PRNGKey(0), cfg)
+    qp, rep = quantize_params(p)
+    assert isinstance(qp["kv_up"], PackedLinear), rep.skipped
+    b = 2
+    cache = mla_mod.init_mla_cache(cfg, b, 32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, cfg.d_model))
+    pos = jnp.array([3, 5], jnp.int32)
+
+    def lazy(pp, cc, xx):
+        return mla_mod.mla_decode(pp, cc, xx, cfg, pos=pos)[0]
+
+    def eager(pp, cc, xx):
+        dense = dict(pp)
+        dense["kv_up"] = {"w": dequantize_packed(pp["kv_up"], jnp.float32)
+                          * pp["kv_up"].input_scale[:, None]}
+        return mla_mod.mla_decode(dense, cc, xx, cfg, pos=pos)[0]
+
+    h, r = cfg.num_heads, cfg.kv_lora_rank
+    full = cfg.qk_nope_head_dim + cfg.v_head_dim
+    _assert_no_shape(jax.make_jaxpr(lazy)(qp, cache, x).jaxpr,
+                     {(r, h * full), (r, h, full)})
+
+    y_lazy = lazy(qp, cache, x)
+    y_eager = eager(qp, cache, x)
+    np.testing.assert_allclose(np.asarray(y_lazy), np.asarray(y_eager),
+                               rtol=2e-5, atol=2e-5)
+
+    t_lazy, t_eager = (_temp_bytes(lazy, qp, cache, x),
+                       _temp_bytes(eager, qp, cache, x))
+    if t_lazy and t_eager:
+        assert t_lazy <= t_eager, (t_lazy, t_eager)

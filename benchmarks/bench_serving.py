@@ -50,6 +50,20 @@ Scenario sections:
     bucket covering the step; reported as the padding-waste % of
     dispatched positions, next to what the old fixed-chunk-width policy
     would have paid on the same steps.
+  * **tiered SLO (preemption + KV spill)** — two overload shapes against
+    the same engine, TTFT measured in *dispatch steps* (deterministic
+    under greedy, so the smoke gate asserts improvements instead of
+    eyeballing wall clock; wall-clock p95 reported alongside):
+    *slot contention* — ``num_slots=2`` fully held by low-priority batch
+    decodes when interactive requests arrive; without preemption they
+    convoy behind a whole batch budget, with it the scheduler spills a
+    victim's KV pages to the host tier and restores it later, holding
+    interactive TTFT flat. *long-context reservation* — a long request's
+    worst-case reservation blocks every short under conservative
+    admission (the scaled-down 32k-convoy problem); optimistic admission
+    admits them immediately and relieves pool pressure by spilling. The
+    preempted streams are asserted token-identical to uninterrupted
+    per-request `generate()` (gated identity section).
   * **mesh-sharded serving** — the full feature stack (chunked + int8 +
     prefix sharing + ngram spec) through ``GenerationEngine(mesh=...)``
     for every ``model``-axis size the host's devices allow: greedy
@@ -90,7 +104,8 @@ from repro.serving import GenerationEngine
 # section that is skipped (or crashes) leaves its key missing, and
 # `main` exits non-zero either way
 REQUIRED_IDENTITY = ("chunked_vs_oneshot_vs_generate", "spec_vs_plain",
-                     "sharded_vs_unsharded", "awq_kernel_vs_ref")
+                     "sharded_vs_unsharded", "awq_kernel_vs_ref",
+                     "preempt_vs_uninterrupted")
 
 NUM_REQUESTS = 16
 NUM_SLOTS = 4
@@ -709,6 +724,192 @@ def run_awq(m, params, csv_rows, identity, smoke=False):
     return {"identical": identical, "weight_bytes": wb, "grid": grid}
 
 
+# ---------------------------------------------------------------------------
+# Tiered SLO: priority preemption + KV page spill under overload
+# ---------------------------------------------------------------------------
+
+SLO_HOLD_STEPS = 4          # dispatches the low tier runs alone before the
+                            # interactive tier arrives (mid-decode overload)
+SLO_STEP_CAP = 5000         # drain-loop fuse: a wedged scheduler raises in
+                            # `run()`, this bounds a hypothetical step leak
+
+
+def _serve_tiered(eng, lo_reqs, hi_reqs, hold_steps=SLO_HOLD_STEPS):
+    """Submit the low tier, let it hold the engine for ``hold_steps``
+    dispatches, then submit the interactive tier and step to drain.
+
+    Interactive TTFT is counted in *dispatch steps since submission*:
+    greedy decode makes step counts a pure function of the schedule, so
+    the gate can assert "preemption held TTFT down" deterministically —
+    the wall-clock numbers are reported alongside for scale.
+    Returns (streams, ttft_steps, ttft_wall, stats).
+    """
+    lo = [eng.submit(p, mn, priority=0) for p, mn in lo_reqs]
+    for _ in range(hold_steps):
+        eng.step()
+    hi = [eng.submit(p, mn, priority=1) for p, mn in hi_reqs]
+    hi_pending = set(hi)
+    first_step, first_wall = {}, {}
+    streams: dict[int, list] = {}
+    step = 0
+    t0 = time.perf_counter()
+    while not eng.idle:
+        events = eng.step()
+        step += 1
+        assert step <= SLO_STEP_CAP, "tiered-SLO drain did not converge"
+        now = time.perf_counter() - t0
+        for rid, _tok in events:
+            if rid in hi_pending:
+                hi_pending.discard(rid)
+                first_step[rid] = step
+                first_wall[rid] = now
+        for rid, toks in eng.collect().items():
+            streams[rid] = [int(t) for t in toks]
+    return ({r: streams[r] for r in lo + hi},
+            [first_step[r] for r in hi],
+            [first_wall[r] for r in hi], eng.stats())
+
+
+def _matches_generate(eng, streams, reqs_by_rid):
+    """Every served stream ≡ an uninterrupted per-request `generate()`."""
+    import jax.numpy as jnp
+    for rid, (p, mn) in reqs_by_rid.items():
+        ref = np.asarray(
+            eng.generate({"tokens": jnp.asarray(p)[None, :]}, mn)[0])
+        if streams[rid] != [int(t) for t in ref[: len(streams[rid])]]:
+            return False
+    return True
+
+
+def run_slo(m, params, csv_rows, identity, smoke=False):
+    """Tiered-SLO overload: priority preemption + KV page spill.
+
+    Two overload shapes, each served with and without the new machinery,
+    TTFT compared in deterministic dispatch steps:
+
+      * **slot contention** — every slot of a 2-slot engine is held by
+        low-priority batch decodes when two interactive requests arrive.
+        Baseline: they convoy behind a full batch budget. Preemption:
+        the scheduler spills a victim's committed KV pages to the host
+        tier, serves the interactive tier, then restores the victim at
+        its commit watermark (zero prefill recompute).
+      * **long-context reservation** — one long-budget request's
+        worst-case page reservation starves every short request under
+        conservative admission (the 32k-convoy problem at smoke scale).
+        Optimistic admission books only what is committed, admits the
+        shorts immediately, and relieves later pool pressure by
+        spilling the long request.
+
+    All preempted streams are asserted token-identical to uninterrupted
+    per-request ``generate()`` references — the "spill/restore changed
+    no bytes" identity section the gate requires.
+    """
+    cfg = m.cfg
+    rng = np.random.default_rng(31)
+
+    def _reqs(n, plen, mn):
+        return [(rng.integers(0, cfg.vocab_size, (plen,)).astype(np.int32),
+                 mn) for _ in range(n)]
+
+    res: dict = {}
+    token_identity = True
+
+    # --- scenario 1: slot contention ------------------------------------
+    lo_budget = 32 if smoke else 64
+    lo_reqs = _reqs(2, 12, lo_budget)
+    hi_reqs = _reqs(2, 6, 4)
+    contention = {}
+    for tag, kw in (("preempt", {"preemption": True}), ("base", {})):
+        eng = _fresh_engine(m, params, num_slots=2, **kw)
+        eng.warmup()
+        streams, tsteps, twall, st = _serve_tiered(eng, lo_reqs, hi_reqs)
+        if tag == "preempt":
+            rids = list(streams)
+            reqs = dict(zip(rids, lo_reqs + hi_reqs))
+            token_identity &= _matches_generate(eng, streams, reqs)
+        contention[tag] = {
+            "ttft_steps_p95": float(np.percentile(tsteps, 95)),
+            "ttft_wall_p95": float(np.percentile(twall, 95)),
+            "preemptions": st.preemptions, "restores": st.restores,
+            "spilled_pages": st.spilled_pages,
+            "restore_ms_mean": st.restore_ms_mean,
+        }
+    res["contention"] = contention
+
+    # --- scenario 2: long-context reservation convoy --------------------
+    # the long request's worst-case reservation ≈ the whole pool; sized so
+    # conservative admission blocks every short until the long finishes
+    if smoke:
+        long_plen, long_mn, max_seq = 12, 61, MAX_SEQ
+        n_short, short_mn = 3, 16
+    else:
+        long_plen, long_mn, max_seq = 64, 256, 384
+        # exactly the free slots (more would slot-preempt the long and
+        # park it before the pool ever dries), with budgets long enough
+        # to still be decoding when the long's growing footprint crosses
+        # the pool (~step 66 of their 90): pressure must relieve by
+        # spilling the long, not by it finishing first
+        n_short, short_mn = NUM_SLOTS - 1, 90
+    long_pages = -(-(long_plen + long_mn - 1) // PAGE_SIZE)
+    num_pages = long_pages + 2           # +1 scratch, +1 free: shorts need
+    long_req = _reqs(1, long_plen, long_mn)     # 2+ pages -> blocked
+    short_reqs = _reqs(n_short, 6, short_mn)
+    longctx = {}
+    for tag, kw in (("optimistic", {"preemption": True,
+                                    "admission": "optimistic"}),
+                    ("reserved", {})):
+        eng = _fresh_engine(m, params, max_seq=max_seq, num_pages=num_pages,
+                            **kw)
+        eng.warmup()
+        streams, tsteps, twall, st = _serve_tiered(eng, long_req, short_reqs)
+        if tag == "optimistic":
+            rids = list(streams)
+            reqs = dict(zip(rids, long_req + short_reqs))
+            token_identity &= _matches_generate(eng, streams, reqs)
+        longctx[tag] = {
+            "ttft_steps_p95": float(np.percentile(tsteps, 95)),
+            "ttft_wall_p95": float(np.percentile(twall, 95)),
+            "pressure_spills": st.pressure_spills,
+            "preemptions": st.preemptions, "restores": st.restores,
+        }
+    res["longctx"] = longctx
+    res["token_identity"] = token_identity
+    identity["preempt_vs_uninterrupted"] = token_identity
+
+    pre, base = contention["preempt"], contention["base"]
+    opt, rsv = longctx["optimistic"], longctx["reserved"]
+    csv_rows.extend([
+        ("serving/slo_interactive_ttft_steps_p95_preempt",
+         f"{pre['ttft_steps_p95']:.0f}",
+         "dispatch steps from arrival to first token, 2 slots fully held "
+         "by low-priority decodes"),
+        ("serving/slo_interactive_ttft_steps_p95_base",
+         f"{base['ttft_steps_p95']:.0f}",
+         "no preemption: convoys behind the whole batch budget"),
+        ("serving/slo_interactive_ttft_wall_p95_preempt_s",
+         f"{pre['ttft_wall_p95']:.3f}", ""),
+        ("serving/slo_interactive_ttft_wall_p95_base_s",
+         f"{base['ttft_wall_p95']:.3f}", ""),
+        ("serving/slo_preemptions", str(pre["preemptions"]),
+         f"{pre['spilled_pages']} page strips spilled to the host tier"),
+        ("serving/slo_restores", str(pre["restores"]),
+         f"{pre['restore_ms_mean']:.2f} ms mean restore latency, resumed "
+         f"at the commit watermark (zero recompute)"),
+        ("serving/slo_longctx_ttft_steps_p95_optimistic",
+         f"{opt['ttft_steps_p95']:.0f}",
+         f"{long_plen}+{long_mn}-token request in a {num_pages}-page pool"),
+        ("serving/slo_longctx_ttft_steps_p95_reserved",
+         f"{rsv['ttft_steps_p95']:.0f}",
+         "worst-case reservation starves the shorts until the long ends"),
+        ("serving/slo_longctx_pressure_spills",
+         str(opt["pressure_spills"]),
+         "optimistic over-admission relieved by spilling the long request"),
+        ("serving/slo_token_identity", str(token_identity),
+         "preempted/spilled streams ≡ uninterrupted generate()"),
+    ])
+    return res
+
+
 def run(csv_rows: list, smoke: bool = False) -> dict:
     cfg = C.get_smoke_config("qwen25-05b")
     m = build_model(cfg)
@@ -733,6 +934,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
                         new_tokens=12, tag_prefix="serving/smoke_spec")
         sharded = run_sharded(csv_rows, identity)
         awq = run_awq(m, params, csv_rows, identity, smoke=True)
+        slo = run_slo(m, params, csv_rows, identity, smoke=True)
         csv_rows.extend([
             ("serving/smoke_sustained_tps", f"{r['useful'] / r['dt']:.1f}",
              f"{r['useful']} tokens, {r['steps']} unified dispatches"),
@@ -743,7 +945,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         ])
         return {"token_identical": identical, "spec": spec,
                 "padding": pack, "sharded": sharded, "awq": awq,
-                "identity_sections": identity, **kv, **prefix}
+                "slo": slo, "identity_sections": identity, **kv, **prefix}
 
     workload = make_workload(cfg)
     su, sl, ss, sdt = run_static(_fresh_engine(m, params), workload)
@@ -759,6 +961,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     spec = run_spec(m, params, csv_rows, identity)
     sharded = run_sharded(csv_rows, identity)
     awq = run_awq(m, params, csv_rows, identity)
+    slo = run_slo(m, params, csv_rows, identity)
 
     s_tps, c_tps = su / sdt, cu / cdt
     rows = [
@@ -786,8 +989,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             "continuous_p95": float(np.percentile(cl, 95)),
             "ttft_p95": float(np.percentile(ct, 95)),
             "token_identical": identical, "spec": spec, "padding": pack,
-            "sharded": sharded, "awq": awq, "identity_sections": identity,
-            **convoy, **kv, **prefix}
+            "sharded": sharded, "awq": awq, "slo": slo,
+            "identity_sections": identity, **convoy, **kv, **prefix}
 
 
 if __name__ == "__main__":
@@ -864,6 +1067,21 @@ if __name__ == "__main__":
     # the packed weight stream must actually be smaller than the float one
     assert out["awq"]["weight_bytes"]["awq"] \
         < out["awq"]["weight_bytes"]["float"]
+    # tiered SLO (deterministic step-count TTFT, so smoke can assert it):
+    # preemption actually fired, restores balanced, and the interactive
+    # tier's p95 TTFT beat the no-preemption convoy — same for optimistic
+    # admission vs the worst-case-reservation baseline
+    slo = out["slo"]
+    assert slo["contention"]["preempt"]["preemptions"] >= 1
+    assert slo["contention"]["preempt"]["restores"] \
+        == slo["contention"]["preempt"]["preemptions"]
+    assert slo["contention"]["preempt"]["spilled_pages"] > 0
+    assert slo["contention"]["preempt"]["ttft_steps_p95"] \
+        < slo["contention"]["base"]["ttft_steps_p95"]
+    assert slo["longctx"]["optimistic"]["ttft_steps_p95"] \
+        < slo["longctx"]["reserved"]["ttft_steps_p95"]
+    assert slo["longctx"]["optimistic"]["pressure_spills"] >= 1
+    assert slo["token_identity"]
     if not args.smoke:
         # the headline claims: sharing saves FLOPs (not just memory),
         # TTFT p95 beats the one-shot baseline on the shared-prefix

@@ -27,6 +27,16 @@ mkdir -p "$RESULTS_DIR"
 rm -f "$RESULTS_DIR"/*.xml "$RESULTS_DIR"/*.log   # never count a stale run
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# --- hypothesis profile: the property-based suites (the pager/scheduler
+# state-machine harness in tests/test_pager_statemachine.py, plus the
+# packing/quantize tests) select their settings via HYPOTHESIS_PROFILE.
+# Default to the small derandomized "tier1" profile so local gate runs are
+# fast and bit-reproducible; CI exports HYPOTHESIS_PROFILE=ci for the
+# 500-example stateful run. No-op when hypothesis is not installed — the
+# suites fall back to their seeded random-walk drivers.
+export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-tier1}"
+echo "HYPOTHESIS_PROFILE=$HYPOTHESIS_PROFILE"
+
 # --- report the device count this gate runs with: the CI matrix runs the
 # gate once on the single real device and once under
 # XLA_FLAGS=--xla_force_host_platform_device_count=4 (exercising the

@@ -322,6 +322,25 @@ def paged_cache_pspec(path: str, leaf: Any, mesh: Mesh, cfg=None) -> P:
     return P(*([None] * len(shape)))
 
 
+def spill_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for page strips crossing the device↔host spill tier.
+
+    Preemption gathers an evicted slot's pages out of the (head-sharded)
+    pools as ``[L, n_pages, P, ...]`` strips and parks their bytes in
+    host memory; restore scatters them back into freshly drawn pages.
+    The strips leave the mesh **replicated**: the gather's out-sharding
+    performs the per-device head-shard collection in the same dispatch
+    (one all-gather over ``model`` for the strip, not the pool), so the
+    host tier holds one complete device-agnostic copy — int8 codes plus
+    scale strips when the pool is quantized, i.e. the spilled bytes stay
+    int8-recompressed. On restore the scatter's in-sharding re-stripes
+    the replicated strip back over KV heads via `paged_cache_pspec`, so
+    each device writes only its head shard. Page IDs (the gather/scatter
+    index operand) use the same replicated sharding.
+    """
+    return NamedSharding(mesh, P())
+
+
 def serving_mesh(model: int | None = None) -> Mesh:
     """A 1-D ``('model',)`` mesh over the first ``model`` local devices.
 

@@ -1,6 +1,7 @@
 from repro.serving.engine import (  # noqa: F401
     EngineStats, GenerationEngine, SamplerConfig, sample, sample_batched)
 from repro.serving.kv_pager import (  # noqa: F401
-    KVPager, PageAllocationError, PagerConfig, PagerStats, commit_prefill)
+    KVPager, PageAllocationError, PagerConfig, PagerStats, SpillRecord,
+    commit_prefill)
 from repro.serving.scheduler import (  # noqa: F401
     Request, Scheduler, ngram_propose, spec_k_buckets, width_family)

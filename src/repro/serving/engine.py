@@ -110,6 +110,14 @@ class EngineStats:
     accepted_tokens: int
     rollbacks: int
     spec_k_now: int               # current draft length (adaptive)
+    # SLO preemption / host KV tier
+    preemptions: int              # slots spilled to the host tier
+    pressure_spills: int          # spills by optimistic-admission pressure
+    restores: int                 # parked requests re-admitted
+    spilled_pages: int            # cumulative page strips gathered to host
+    restored_pages: int           # cumulative page strips scattered back
+    pages_spilled_now: int        # live host-tier pages right now
+    restore_ms_mean: float        # mean wall latency of one restore
     # sharding + memory
     model_axis: int               # |model| mesh axis (1 = unsharded)
     kv_pool_bytes: int            # global page-pool footprint, all layers
@@ -169,7 +177,9 @@ class GenerationEngine:
                  spec_adaptive: bool = False,
                  draft_model=None, draft_params=None,
                  draft_fn=None,
-                 mesh=None):
+                 mesh=None,
+                 preemption: bool = False,
+                 admission: str = "reserved"):
         self.model = model
         self.params = params
         self.cfg = model.cfg
@@ -246,6 +256,18 @@ class GenerationEngine:
         self.draft_model = draft_model
         self.draft_params = draft_params
         self._custom_draft_fn = draft_fn
+        # SLO-aware preemption: priority classes on submit(), victim
+        # spill to a host-memory page tier, zero-recompute restore.
+        # admission="optimistic" drops the worst-case decode reservation
+        # (preemption becomes the safety valve when the pool runs dry).
+        if admission not in ("reserved", "optimistic"):
+            raise ValueError(f"unknown admission policy {admission!r}")
+        if admission == "optimistic" and not preemption:
+            raise ValueError("admission='optimistic' requires "
+                             "preemption=True — without spill as a safety "
+                             "valve a drained pool would fail extend()")
+        self.preemption = preemption
+        self.admission = admission
         self._next_rid = 0
         self._scheduler: Scheduler | None = None
         self._paged_cache = None
@@ -291,7 +313,9 @@ class GenerationEngine:
         pager = KVPager(PagerConfig(num_pages=num_pages,
                                     page_size=self.page_size,
                                     num_slots=self.num_slots,
-                                    pages_per_slot=pages_per_slot))
+                                    pages_per_slot=pages_per_slot,
+                                    optimistic=(self.admission
+                                                == "optimistic")))
         self._paged_cache = self.model.init_paged_cache(
             self.num_slots, num_pages, self.page_size, self.max_seq,
             kv_quant=self.kv_quant)
@@ -313,11 +337,18 @@ class GenerationEngine:
                 "path: archs with bounded per-slot sequential state "
                 "(ring/SSM/MLA) and the one-shot baseline stay "
                 "single-device — pass mesh=None")
+        if self.preemption and not chunked:
+            raise ValueError(
+                "preemption requires the chunked serving path: restore "
+                "re-enters the unified chunk dispatch at the commit "
+                "watermark, which one-shot prefill does not track")
         self._key = jax.random.PRNGKey(self._seed)
         self._tables_version = -1
         self._tables_dev = None
         self._tables_sliced = {}
         self._init_mesh_placement()
+        if self.preemption:
+            self._init_spill_tier()
         if chunked:
             # ONE compiled step for everything: prefill chunks + decode
             # token runs packed into a fixed [num_slots, c] block
@@ -344,7 +375,12 @@ class GenerationEngine:
                              spec_decode=sched_spec, spec_k=self.spec_k,
                              adaptive_spec_k=self.spec_adaptive,
                              draft_fn=draft_fn,
-                             ngram_max=self.spec_ngram_max)
+                             ngram_max=self.spec_ngram_max,
+                             preemption=self.preemption,
+                             spill_fn=(self._exec_spill
+                                       if self.preemption else None),
+                             restore_fn=(self._exec_restore
+                                         if self.preemption else None))
         # one-shot path: one dispatch per admission fusing prefill + page
         # commit + first sample (start_page static: commit skips the
         # aliased shared-prefix pages), jit per prompt length
@@ -386,6 +422,90 @@ class GenerationEngine:
                                            shd.paged_cache_pspec)
         self._params_run = jax.device_put(self.params, self._param_sh)
         self._paged_cache = jax.device_put(self._paged_cache, self._cache_sh)
+
+    # --- host-memory page tier (preemption spill/restore) -----------------
+    def _init_spill_tier(self):
+        """Compile the page-strip movers behind `KVPager.spill`/`restore`.
+
+        Gather reads ``pool[:, ids]`` strips out of every kv_pool leaf —
+        int8 codes + scale strips when the pool is quantized, so the host
+        tier holds the pages **int8-recompressed**, never re-inflated.
+        Scatter writes them into freshly drawn pages with the cache
+        donated (the pool buffers mutate in place like every other
+        dispatch). Under a mesh the strips cross the tier replicated
+        (`distributed.sharding.spill_sharding`): the gather all-gathers
+        each device's head shard in-dispatch, the scatter re-stripes on
+        the way back in, and the host-side page ids stay device-agnostic.
+        """
+        if self._mesh is None:
+            self._spill_sh = None
+            self._spill_gather = self._exec_jit(self._spill_gather_fn)
+            self._spill_scatter = self._exec_jit(self._spill_scatter_fn,
+                                                 donate_argnums=(0,))
+            return
+        from repro.distributed import sharding as shd
+        self._spill_sh = shd.spill_sharding(self._mesh)
+        self._spill_gather = self._exec_jit(
+            self._spill_gather_fn,
+            in_shardings=(self._cache_sh, self._spill_sh),
+            out_shardings=self._spill_sh)
+        self._spill_scatter = self._exec_jit(
+            self._spill_scatter_fn, donate_argnums=(0,),
+            in_shardings=(self._cache_sh, self._spill_sh, self._spill_sh),
+            out_shardings=self._cache_sh)
+
+    def _spill_gather_fn(self, cache, ids):
+        """cache, page ids [n] → {seg: {leaf: [L, n, P, ...] strips}}."""
+        return {seg: {k: leaf[:, ids]
+                      for k, leaf in entry["kv_pool"].items()}
+                for seg, entry in cache.items()}
+
+    def _spill_scatter_fn(self, cache, ids, strips):
+        """Write gathered strips into pages ``ids`` of every pool leaf."""
+        return {seg: {"kv_pool": {
+                    k: leaf.at[:, ids].set(
+                        strips[seg][k].astype(leaf.dtype))
+                    for k, leaf in entry["kv_pool"].items()}}
+                for seg, entry in cache.items()}
+
+    @staticmethod
+    def _spill_bucket(n: int) -> int:
+        """Geometric page-count bucket for spill strips, so the compiled
+        gather/scatter family stays O(log pages_per_slot); the pad ids
+        point at the scratch page 0, whose content is never read."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
+
+    def _spill_ids_dev(self, ids: list[int], n: int):
+        padded = np.zeros(self._spill_bucket(n), np.int32)
+        padded[:n] = ids
+        if self._mesh is not None:
+            return jax.device_put(padded, self._spill_sh)
+        return jnp.asarray(padded)
+
+    def _exec_spill(self, phys_ids: list[int]) -> dict:
+        """Scheduler spill hook: gather ``phys_ids``'s pool bytes BEFORE
+        the pager releases those pages. The gather is dispatched async —
+        the strips snapshot the pre-release cache value (functional
+        arrays), and the device→host DMA overlaps the decode dispatches
+        that follow; nothing blocks until the strips are needed again."""
+        n = len(phys_ids)
+        strips = self._spill_gather(self._paged_cache,
+                                    self._spill_ids_dev(phys_ids, n))
+        for leaf in jax.tree.leaves(strips):
+            if hasattr(leaf, "copy_to_host_async"):
+                leaf.copy_to_host_async()
+        return {"n": n, "strips": strips}
+
+    def _exec_restore(self, handle: dict, fresh_ids: list[int]) -> None:
+        """Scheduler restore hook: scatter the parked strips into the
+        freshly drawn pages (the pager already rebuilt the page table)."""
+        assert len(fresh_ids) == handle["n"]
+        self._paged_cache = self._spill_scatter(
+            self._paged_cache, self._spill_ids_dev(fresh_ids, handle["n"]),
+            handle["strips"])
 
     @staticmethod
     def _exec_jit(fn, **jit_kw):
@@ -826,7 +946,8 @@ class GenerationEngine:
     def submit(self, tokens, max_new_tokens: int,
                sampler: SamplerConfig | None = None,
                eos_id: int | None = None,
-               prefix_id: str | None = None) -> int:
+               prefix_id: str | None = None,
+               priority: int = 0) -> int:
         """Queue one request; returns its request id.
 
         ``prefix_id`` opts the request into prefix sharing: requests
@@ -834,6 +955,14 @@ class GenerationEngine:
         whose token content matches their prompt's page-aligned prefix
         (typically a common system prompt), copy-on-write on the partial
         tail page. Greedy streams are token-identical with or without it.
+
+        ``priority`` is the request's SLO class (higher = more urgent):
+        admission strictly prefers higher classes, and with
+        ``preemption=True`` a stalled higher class spills a lower-class
+        victim's KV pages to the host tier and takes its slot; the victim
+        restores later with zero recompute. Priorities reorder
+        **scheduling**, never tokens — every stream stays identical to
+        its uninterrupted run.
         """
         if self._scheduler is None:
             self._scheduler = self._serving_init()
@@ -845,8 +974,16 @@ class GenerationEngine:
             max_new_tokens=max_new_tokens, temperature=s.temperature,
             top_k=s.top_k,
             eos_id=self.eos_id if eos_id is None else eos_id,
-            prefix_id=prefix_id))
+            prefix_id=prefix_id, priority=priority))
         return rid
+
+    def preempt(self, rid: int) -> bool:
+        """Spill ``rid``'s slot to the host tier now (ops/test hook —
+        organic preemption is priority-driven). False when ``rid`` holds
+        no slot. Requires ``preemption=True``."""
+        if self._scheduler is None:
+            return False
+        return self._scheduler.preempt_request(rid)
 
     def pin_prefix(self, prefix_id: str) -> int:
         """Keep ``prefix_id``'s indexed KV pages resident across bursts.
@@ -946,6 +1083,14 @@ class GenerationEngine:
             accepted_tokens=st.accepted_tokens,
             rollbacks=st.rollbacks,
             spec_k_now=self._scheduler.spec_k_cur,
+            preemptions=st.preemptions,
+            pressure_spills=st.pressure_spills,
+            restores=st.restores,
+            spilled_pages=st.spilled_pages,
+            restored_pages=st.restored_pages,
+            pages_spilled_now=self._scheduler.pager.stats().pages_spilled,
+            restore_ms_mean=(st.restore_time_s * 1e3
+                             / max(st.restores, 1)),
             model_axis=model_axis,
             kv_pool_bytes=pool_total,
             kv_pool_bytes_per_device=pool_per_dev,

@@ -75,10 +75,37 @@ burst aliases it without recomputing — `unpin_prefix` releases the pin,
 returning pages to the free list exactly once when no request holds them
 either.
 
-Admission control is conservative: a request is admitted only if its
-worst-case footprint (prompt + max_new − 1 tokens, minus aliased pages)
-can be covered by free plus already-reserved pages, so `extend` during
-decode can never fail.
+Admission control is conservative by default: a request is admitted only
+if its worst-case footprint (prompt + max_new − 1 tokens, minus aliased
+pages) can be covered by free plus already-reserved pages, so `extend`
+during decode can never fail. With ``PagerConfig.optimistic`` the
+reservation is dropped: admission only requires the prompt's pages (plus
+one page of headroom) and `extend` draws straight from the free pool —
+steady-state occupancy rises, and the scheduler's preemption + spill
+machinery is the safety valve when the pool runs dry.
+
+Preemption spill/restore (`spill` / `restore`):
+
+  * `spill(slot)` evicts an active slot to a **host-memory tier**: pages
+    the slot owns exclusively (refcount 1, not prefix-indexed) are
+    released to the free list — the engine gathers their bytes to host
+    first via `peek_spill` — while aliased/pinned/prefix-indexed pages
+    are **never spilled**: they stay resident and shareable, with the
+    returned `SpillRecord` holding the slot's refcount on them. The
+    record also carries the slot's commit watermark, length and decode
+    reservation, so a restore is a re-admission that skips prefill
+    entirely.
+  * `restore(record)` re-places the request in a (possibly different)
+    free slot: fresh physical pages are drawn for the spilled logical
+    pages (the engine scatters the host bytes back), kept pages reattach
+    with their refcount transferred back, and the watermark/reservation
+    come back exactly as spilled. Raises `PageAllocationError` without
+    mutating anything when capacity is short — the caller retries later.
+  * spill/truncate/free are mutually safe: a spilled slot is inactive,
+    so `truncate`/`free_slot`/`commit_chunk`/`extend` on it raise before
+    mutating (same hardening as the refcount-underflow guards), a
+    double `spill` raises, and a `restore` of an already-restored or
+    dropped record raises.
 
 `commit_prefill` is the device-side bridge from a per-request dense
 prefill cache (``model.prefill`` output, batch 1, seq = prompt length) into
@@ -106,6 +133,10 @@ class PagerConfig:
     page_size: int        # tokens per page
     num_slots: int        # concurrent requests (decode batch size)
     pages_per_slot: int   # logical blocks per slot (slot capacity / P)
+    # optimistic admission: admit on the prompt's pages alone (no decode
+    # reservation); `extend` draws from the free pool and the scheduler's
+    # preemption + spill machinery relieves pressure when it runs dry
+    optimistic: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +156,33 @@ class PagerStats:
     logical_pages: int    # per-slot mappings (aliased count per owner)
     slots_active: int
     slots_free: int
+    pages_spilled: int = 0   # logical pages parked in the host tier
+    spill_records: int = 0   # preempted requests awaiting restore
+
+
+@dataclasses.dataclass
+class SpillRecord:
+    """Host-tier image of one preempted slot's page accounting.
+
+    ``layout`` preserves the slot's logical page order: ``("spilled", i)``
+    entries point into the host-tier byte strips (``i`` is the gather
+    order the engine used for `peek_spill`), ``("kept", pg)`` entries are
+    aliased/pinned/prefix-indexed physical pages that never left the
+    device — the record holds the slot's refcount on them, so they stay
+    resident and shareable while the request is parked.
+    """
+    spill_id: int
+    layout: list[tuple[str, int]]
+    spilled_pages: list[int]   # original physical ids, gather order (dead
+                               # after spill — bytes live in the host tier)
+    slot_len: int              # tokens of valid KV at spill time
+    committed: int             # chunked-prefill commit watermark
+    reserved: int              # decode-tail reservation to re-take on restore
+    restored: bool = False
+
+    @property
+    def n_spilled(self) -> int:
+        return len(self.spilled_pages)
 
 
 def _chain_key(prev: bytes, chunk: np.ndarray) -> bytes:
@@ -163,6 +221,10 @@ class KVPager:
         self._page_ns: dict[int, bytes] = {}
         self._pinned_ns: set[bytes] = set()
         self._pin_pages: dict[bytes, set[int]] = {}
+        # preemption: spill_id → SpillRecord for requests parked in the
+        # host tier (spilled, not yet restored or dropped)
+        self.spill_records: dict[int, SpillRecord] = {}
+        self._next_spill_id = 0
         # bumped on every page-table mutation; lets the engine cache the
         # device copy of the tables instead of re-uploading each step
         self.version = 0
@@ -210,7 +272,10 @@ class KVPager:
             pages_reserved=self._reserved,
             logical_pages=self.logical_pages_in_use,
             slots_active=len(self.slot_pages),
-            slots_free=len(self.free_slots))
+            slots_free=len(self.free_slots),
+            pages_spilled=sum(r.n_spilled
+                              for r in self.spill_records.values()),
+            spill_records=len(self.spill_records))
 
     # ----------------------------------------------------------- lifecycle
     def fits(self, prompt_len: int, max_new_tokens: int) -> bool:
@@ -226,11 +291,19 @@ class KVPager:
 
     def can_admit(self, prompt_len: int, max_new_tokens: int,
                   n_shared: int = 0) -> bool:
-        total = prompt_len + max_new_tokens - 1
-        return (bool(self.free_slots)
-                and self.fits(prompt_len, max_new_tokens)
-                and (len(self.free_pages) - self._reserved
-                     >= self.pages_for(total) - n_shared))
+        if not (self.free_slots and self.fits(prompt_len, max_new_tokens)):
+            return False
+        if self.cfg.optimistic:
+            # prompt pages now + one page of decode headroom; the decode
+            # tail is NOT reserved — extend draws from the free pool and
+            # preemption spills a victim when it runs dry
+            need = self.pages_for(prompt_len) - n_shared
+            if max_new_tokens > 1:
+                need += 1
+        else:
+            total = prompt_len + max_new_tokens - 1
+            need = self.pages_for(total) - n_shared
+        return len(self.free_pages) - self._reserved >= need
 
     # ------------------------------------------------------- prefix sharing
     def match_prefix(self, tokens, prefix_id) -> list[int]:
@@ -370,8 +443,9 @@ class KVPager:
         self.slot_pages[slot] = pages
         self.page_tables[slot, :now] = pages
         self.version += 1
-        self.slot_reserved[slot] = total - now
-        self._reserved += total - now
+        reserve = 0 if self.cfg.optimistic else total - now
+        self.slot_reserved[slot] = reserve
+        self._reserved += reserve
         self.slot_len[slot] = prompt_len
         # aliased prefix pages are already-committed content: chunked
         # prefill starts past them (their tokens are never recomputed)
@@ -389,6 +463,9 @@ class KVPager:
         drawn at admission, so a chunk can never land on an unmapped
         page — reservation accounting is untouched.
         """
+        if slot not in self.slot_pages:
+            raise PageAllocationError(
+                f"commit_chunk on inactive slot {slot} (spilled or freed?)")
         done = self.slot_committed[slot]
         if start > done:
             raise PageAllocationError(
@@ -400,22 +477,38 @@ class KVPager:
         self.slot_committed[slot] = max(done, end)
 
     def extend(self, slot: int, new_len: int) -> None:
-        """Grow a slot's mapping to cover ``new_len`` tokens (from reserve)."""
+        """Grow a slot's mapping to cover ``new_len`` tokens.
+
+        Pages come from the slot's decode reservation (conservative
+        admission — cannot fail) or, under ``optimistic`` admission,
+        straight from the free pool — raising `PageAllocationError` on an
+        empty pool, which the scheduler's pre-dispatch pressure relief is
+        there to prevent.
+        """
+        if slot not in self.slot_pages:
+            raise PageAllocationError(
+                f"extend of inactive slot {slot} (spilled or freed?)")
         pages = self.slot_pages[slot]
         need = self.pages_for(new_len)
         if need > self.cfg.pages_per_slot:
             raise PageAllocationError(f"slot {slot} over capacity: {new_len}")
         while len(pages) < need:
-            if self.slot_reserved[slot] <= 0:
+            from_reserve = self.slot_reserved[slot] > 0
+            if not from_reserve and not (self.cfg.optimistic
+                                         and self.free_pages):
                 raise PageAllocationError(
-                    f"slot {slot} grew past its reservation ({new_len})")
+                    f"slot {slot} grew past its reservation ({new_len})"
+                    if not self.cfg.optimistic else
+                    f"slot {slot}: free pool exhausted at {new_len} tokens "
+                    f"(optimistic admission needs preemption pressure relief)")
             page = self.free_pages.pop()
             self.page_ref[page] = 1
             self.page_tables[slot, len(pages)] = page
             pages.append(page)
             self.version += 1
-            self.slot_reserved[slot] -= 1
-            self._reserved -= 1
+            if from_reserve:
+                self.slot_reserved[slot] -= 1
+                self._reserved -= 1
         self.slot_len[slot] = max(int(self.slot_len[slot]), new_len)
 
     def truncate(self, slot: int, new_len: int) -> int:
@@ -467,8 +560,9 @@ class KVPager:
             pg = pages.pop()
             self._release_page(pg)
             self.page_tables[slot, len(pages)] = 0
-            self.slot_reserved[slot] += 1
-            self._reserved += 1
+            if not self.cfg.optimistic:   # optimistic extend drew from the
+                self.slot_reserved[slot] += 1   # free pool, not a reserve
+                self._reserved += 1
             released += 1
         if released:
             self.version += 1
@@ -491,6 +585,175 @@ class KVPager:
         self.slot_len[slot] = 0
         self.free_slots.append(slot)
         self.version += 1
+
+    # ------------------------------------------------- preemption spill tier
+    def _spillable(self, pg: int) -> bool:
+        """A page leaves the device only if this slot is its sole owner and
+        no prefix-index entry could hand it to a future request."""
+        return int(self.page_ref[pg]) == 1 and pg not in self._page_key
+
+    def peek_spill(self, slot: int) -> list[int]:
+        """Physical pages `spill(slot)` WOULD move to the host tier, in
+        logical order — the engine gathers their bytes off the device
+        before the accounting releases them for reuse."""
+        if slot not in self.slot_pages:
+            raise PageAllocationError(f"spill of inactive slot {slot}")
+        return [pg for pg in self.slot_pages[slot] if self._spillable(pg)]
+
+    def spill(self, slot: int) -> SpillRecord:
+        """Evict an active slot to the host tier; the slot itself frees.
+
+        Exclusive unindexed pages return to the free list (their bytes
+        must already be gathered — see `peek_spill`); aliased, pinned and
+        prefix-indexed pages stay resident, with the returned record
+        inheriting the slot's refcount on them so sharing keeps working
+        while the request is parked. The record snapshots slot length,
+        commit watermark and decode reservation for an exact restore.
+        Spilling an inactive (already spilled/freed) slot raises before
+        mutating anything.
+        """
+        if slot not in self.slot_pages:
+            raise PageAllocationError(f"spill of inactive slot {slot}")
+        pages = self.slot_pages.pop(slot)
+        layout: list[tuple[str, int]] = []
+        spilled: list[int] = []
+        for pg in pages:
+            if self._spillable(pg):
+                layout.append(("spilled", len(spilled)))
+                spilled.append(pg)
+                self._release_page(pg)
+            else:                       # record inherits the slot's refcount
+                layout.append(("kept", pg))
+        rec = SpillRecord(
+            spill_id=self._next_spill_id, layout=layout,
+            spilled_pages=spilled, slot_len=int(self.slot_len[slot]),
+            committed=self.slot_committed.pop(slot, 0),
+            reserved=self.slot_reserved.pop(slot, 0))
+        self._next_spill_id += 1
+        self._reserved -= rec.reserved
+        self.page_tables[slot, :] = 0
+        self.slot_len[slot] = 0
+        self.free_slots.append(slot)
+        self.spill_records[rec.spill_id] = rec
+        self.version += 1
+        return rec
+
+    def can_restore(self, rec: SpillRecord) -> bool:
+        """Could `restore(rec)` succeed right now? Needs a free slot,
+        fresh pages for every spilled strip, the record's reservation
+        back, and (optimistic mode) one page of decode headroom."""
+        if rec.restored or rec.spill_id not in self.spill_records:
+            return False
+        need = rec.n_spilled + rec.reserved
+        if self.cfg.optimistic:
+            need += 1
+        return (bool(self.free_slots)
+                and len(self.free_pages) - self._reserved >= need)
+
+    def restore(self, rec: SpillRecord) -> tuple[int, list[int]]:
+        """Re-admit a spilled request into a (possibly different) slot.
+
+        Returns ``(slot, fresh_pages)`` where ``fresh_pages`` are the new
+        physical pages for the spilled strips in gather order — the engine
+        scatters the host-tier bytes into them. Kept pages reattach with
+        the record's refcount transferred back to the slot. Raises
+        `PageAllocationError` without mutating anything when capacity is
+        short or the record was already restored/dropped.
+        """
+        if rec.restored or rec.spill_id not in self.spill_records:
+            raise PageAllocationError(
+                f"restore of dead spill record {rec.spill_id} "
+                f"(already restored or dropped)")
+        if not self.can_restore(rec):
+            raise PageAllocationError(
+                f"cannot restore spill {rec.spill_id}: needs "
+                f"{rec.n_spilled}+{rec.reserved} pages, "
+                f"free={len(self.free_pages)} reserved={self._reserved} "
+                f"free_slots={len(self.free_slots)}")
+        slot = self.free_slots.pop()
+        fresh = [self.free_pages.pop() for _ in range(rec.n_spilled)]
+        for pg in fresh:
+            self.page_ref[pg] = 1
+        pages = [fresh[ref] if tag == "spilled" else ref
+                 for tag, ref in rec.layout]
+        self.slot_pages[slot] = pages
+        self.page_tables[slot, :len(pages)] = pages
+        self.slot_len[slot] = rec.slot_len
+        self.slot_committed[slot] = rec.committed
+        self.slot_reserved[slot] = rec.reserved
+        self._reserved += rec.reserved
+        rec.restored = True
+        del self.spill_records[rec.spill_id]
+        self.version += 1
+        return slot, fresh
+
+    def drop_spill(self, rec: SpillRecord) -> None:
+        """Abandon a parked request (cancelled while spilled): release the
+        record's refcount on kept pages; host-tier bytes just die. Raises
+        on a record already restored or dropped."""
+        if rec.restored or rec.spill_id not in self.spill_records:
+            raise PageAllocationError(
+                f"drop of dead spill record {rec.spill_id}")
+        for tag, ref in rec.layout:
+            if tag == "kept":
+                self._release_page(ref)
+        rec.restored = True
+        del self.spill_records[rec.spill_id]
+        self.version += 1
+
+    # ---------------------------------------------------------- invariants
+    def verify_invariants(self) -> None:
+        """Assert the global accounting invariants (test/debug hook; the
+        property-based harness calls this after every rule).
+
+        Checks: free-exactly-once (no duplicate free-list entries, free ⟺
+        refcount 0), refcount conservation (every page's refcount equals
+        its owner count across slots + pins + spill records' kept pages),
+        reservation consistency, page-table mirrors, and watermark/length
+        bounds per slot.
+        """
+        cfg = self.cfg
+        free = set(self.free_pages)
+        assert len(free) == len(self.free_pages), "free list holds duplicates"
+        assert 0 not in free, "scratch page 0 on the free list"
+        expected = np.zeros(cfg.num_pages, np.int64)
+        for pages in self.slot_pages.values():
+            for pg in pages:
+                expected[pg] += 1
+        for held in self._pin_pages.values():
+            for pg in held:
+                expected[pg] += 1
+        for rec in self.spill_records.values():
+            for tag, ref in rec.layout:
+                if tag == "kept":
+                    expected[ref] += 1
+        for pg in range(1, cfg.num_pages):
+            ref = int(self.page_ref[pg])
+            assert ref == expected[pg], (
+                f"page {pg}: refcount {ref} != owner count {expected[pg]}")
+            assert (pg in free) == (ref == 0), (
+                f"page {pg}: free-list membership disagrees with ref {ref}")
+        assert self.pages_in_use == cfg.num_pages - 1 - len(free)
+        assert self._reserved == sum(self.slot_reserved.values()) >= 0
+        if not cfg.optimistic:
+            assert len(free) >= self._reserved, "reservation not backed"
+        active = set(self.slot_pages)
+        assert active.isdisjoint(self.free_slots)
+        assert len(self.free_slots) == len(set(self.free_slots))
+        assert sorted(active | set(self.free_slots)) == \
+            list(range(cfg.num_slots))
+        for slot, pages in self.slot_pages.items():
+            n = len(pages)
+            assert n <= cfg.pages_per_slot
+            cover = max(int(self.slot_len[slot]),
+                        self.slot_committed.get(slot, 0))
+            assert self.pages_for(cover) <= n, (
+                f"slot {slot}: {cover} tokens not covered by {n} pages")
+            assert list(self.page_tables[slot, :n]) == pages
+            assert not self.page_tables[slot, n:].any()
+        for slot in self.free_slots:
+            assert not self.page_tables[slot].any()
+            assert int(self.slot_len[slot]) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -36,9 +36,32 @@ corrected/bonus token (standard acceptance sampling — exactly
 token-identical to sequential decode under greedy), and rejected
 suffixes roll the KV watermark back via `KVPager.truncate`.
 
-Shared across both: FIFO admission when a slot is free and the pager can
-cover the request's worst-case KV footprint; EOS/budget eviction with
-immediate backfill from the queue in the same `step()`.
+Shared across both: FIFO-within-priority admission when a slot is free
+and the pager can cover the request's worst-case KV footprint; EOS/budget
+eviction with immediate backfill from the queue in the same `step()`.
+
+SLO-aware preemption (``preemption=True``, chunked mode only):
+
+  * `Request.priority` classes order the queue (higher first, FIFO within
+    a class). When admission of a higher class would otherwise stall, the
+    scheduler picks a **victim** among strictly-lower-priority active
+    slots — lowest priority, then most pages held, then least progress —
+    and spills it through `KVPager.spill` to the host tier (the engine's
+    ``spill_fn`` gathers the evicted pages' bytes off the device first).
+  * Preempted requests park in ``self.preempted`` with their full slot
+    state (generated tokens, prefill progress). Re-admission prefers
+    parked requests over the queue at equal-or-higher priority — they
+    hold committed KV — and `restore` re-enters the chunk dispatch at
+    the pager's commit watermark with **zero recompute**: a decoding
+    request resumes decoding, a mid-prefill request resumes at its next
+    chunk.
+  * Under ``PagerConfig.optimistic`` admission the scheduler also runs a
+    pre-dispatch **pressure check**: if this step's decode/verify
+    extends would drain the free pool, victims are spilled (same score)
+    before packing, which keeps `extend` infallible at dispatch time.
+    Progress is guaranteed: `fits` caps any single request at the pool
+    size, so spilling down to one slot always relieves the pressure
+    (absent pathological pinning, which raises a clear error).
 
 The scheduler is deliberately device-agnostic: it talks to the engine
 through callables (`run_batch` for chunked mode, `prefill_commit` +
@@ -48,12 +71,13 @@ unit-tested with a fake executor.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable
 
 import numpy as np
 
-from repro.serving.kv_pager import KVPager
+from repro.serving.kv_pager import KVPager, SpillRecord
 
 
 def ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3,
@@ -131,6 +155,7 @@ class Request:
     top_k: int = 0                # 0 ⇒ full softmax
     eos_id: int = -1              # -1 ⇒ never stops early
     prefix_id: str | None = None  # opt into prefix sharing (namespace key)
+    priority: int = 0             # SLO class: higher admits/preempts lower
 
 
 @dataclasses.dataclass
@@ -162,6 +187,16 @@ class _SlotState:
 
 
 @dataclasses.dataclass
+class _Preempted:
+    """A spilled request parked off-device: scheduler state + the pager's
+    spill record + the engine's opaque handle onto the host-tier bytes."""
+    state: _SlotState
+    record: SpillRecord
+    handle: object
+    seq: int                      # spill order (FIFO restore within class)
+
+
+@dataclasses.dataclass
 class SchedulerStats:
     admitted: int = 0
     finished: int = 0
@@ -184,6 +219,15 @@ class SchedulerStats:
     padded_positions_fixed: int = 0   # what padding the pre-run-length
     #                                   policy (c = chunk_size whenever
     #                                   anything prefills) would have paid
+    # --- preemption / spill ---------------------------------------------
+    preemptions: int = 0          # slots spilled to the host tier
+    pressure_spills: int = 0      # of those, spills by the page-pressure
+    #                               check (optimistic admission), not SLO
+    restores: int = 0             # parked requests re-admitted
+    spilled_pages: int = 0        # page strips gathered to the host tier
+    restored_pages: int = 0       # page strips scattered back
+    restore_time_s: float = 0.0   # wall time inside restore (pager +
+    #                               device scatter), for restore latency
 
     @property
     def acceptance_rate(self) -> float:
@@ -241,7 +285,10 @@ class Scheduler:
                  spec_k: int = 4,
                  adaptive_spec_k: bool = False,
                  draft_fn: Callable | None = None,
-                 ngram_max: int = 3):
+                 ngram_max: int = 3,
+                 preemption: bool = False,
+                 spill_fn: Callable | None = None,
+                 restore_fn: Callable | None = None):
         self.pager = pager
         self.num_slots = pager.cfg.num_slots
         self.chunked = run_batch is not None
@@ -282,8 +329,24 @@ class Scheduler:
         self._accept_ema: float | None = None
         self.width_buckets = width_family(
             chunk_size, spec_k if spec_decode is not None else 0)
+        if preemption and not self.chunked:
+            raise ValueError("preemption requires the chunked "
+                             "(token-budget) execution path")
+        if pager.cfg.optimistic and not preemption:
+            raise ValueError("optimistic admission needs preemption as "
+                             "its safety valve (extend can fail)")
+        self.preemption = preemption
+        # engine hooks moving page bytes across the device↔host tier:
+        # spill_fn(phys_ids) → opaque handle (gather BEFORE the pager
+        # releases the pages); restore_fn(handle, fresh_ids) scatters the
+        # bytes into the freshly drawn pages. None ⇒ host-accounting-only
+        # (fake-executor tests).
+        self._spill_fn = spill_fn
+        self._restore_fn = restore_fn
         self.queue: deque[Request] = deque()
         self.slots: dict[int, _SlotState] = {}
+        self.preempted: list[_Preempted] = []
+        self._preempt_seq = 0
         self.finished: dict[int, np.ndarray] = {}
         self.stats = SchedulerStats()
 
@@ -303,7 +366,12 @@ class Scheduler:
                 f"tokens vs slot capacity "
                 f"{pc.pages_per_slot * pc.page_size} "
                 f"({pc.num_pages - 1} usable pages)")
-        self.queue.append(request)
+        # priority-ordered queue: insert before the first strictly-lower
+        # class; equal priorities keep FIFO order (plain append)
+        i = len(self.queue)
+        while i > 0 and self.queue[i - 1].priority < request.priority:
+            i -= 1
+        self.queue.insert(i, request)
 
     @property
     def num_active(self) -> int:
@@ -311,7 +379,7 @@ class Scheduler:
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.slots
+        return not self.queue and not self.slots and not self.preempted
 
     def step(self) -> list[tuple[int, int]]:
         """Admit → one dispatch over all slots → evict + backfill.
@@ -329,16 +397,46 @@ class Scheduler:
         return events
 
     def run(self) -> dict[int, np.ndarray]:
-        """Drain queue + slots to completion; returns {rid: tokens}."""
+        """Drain queue + slots + parked requests; returns {rid: tokens}."""
         while not self.idle:
-            self.step()
+            before = (len(self.slots), len(self.preempted), len(self.queue))
+            events = self.step()
+            if not self.slots and not events and before == (
+                    len(self.slots), len(self.preempted), len(self.queue)):
+                raise RuntimeError(
+                    "scheduler wedged: parked/queued requests cannot be "
+                    "placed (pool exhausted by pins or kept shared pages)")
         out, self.finished = self.finished, {}
         return out
 
     # ------------------------------------------------------------ admission
     def _admit(self, events: list[tuple[int, int]]) -> None:
-        while self.queue:
-            req = self.queue[0]
+        """Place work on free slots, strictly by priority.
+
+        Parked (preempted) requests take precedence over the queue within
+        a priority class — they hold committed KV, so restoring them
+        first minimizes both host-tier residency and wasted pool work.
+        When the next candidate cannot be placed and preemption is on, a
+        strictly-lower-priority victim is spilled and placement retried;
+        candidates of lower priority never leapfrog a stalled higher one.
+        """
+        while True:
+            cand = min(self.preempted,
+                       key=lambda p: (-p.state.request.priority, p.seq)) \
+                if self.preempted else None
+            head = self.queue[0] if self.queue else None
+            if cand is not None and (
+                    head is None
+                    or cand.state.request.priority >= head.priority):
+                if self._try_restore(cand):
+                    continue
+                if self.preemption and self._preempt_one(
+                        below=cand.state.request.priority):
+                    continue
+                return
+            if head is None:
+                return
+            req = head
             # chunked mode registers a prefix on its final chunk; while a
             # slot with the same namespace is still prefilling, hold the
             # queue head so the follower admits against the full
@@ -347,7 +445,7 @@ class Scheduler:
                     and any(st.prefilling
                             and st.request.prefix_id == req.prefix_id
                             for st in self.slots.values())):
-                break
+                return
             # prefix detection at admission: requests that opted in
             # (prefix_id set) alias any already-resident full pages whose
             # content-hash chain matches their prompt — those pages don't
@@ -356,33 +454,144 @@ class Scheduler:
                       if req.prefix_id is not None else [])
             if not self.pager.can_admit(len(req.tokens), req.max_new_tokens,
                                         n_shared=len(shared)):
-                break
-            self.queue.popleft()
-            slot, pages = self.pager.alloc_slot(len(req.tokens),
-                                                req.max_new_tokens,
-                                                shared_pages=shared)
-            self.stats.prefix_shared_pages += len(shared)
-            self.stats.admitted += 1
-            if self.chunked:
-                # aliased tokens are already resident: chunking starts past
-                # them (at least the final prompt token always runs, so the
-                # first-token logits exist even for a fully aliased prompt)
-                skip = min(len(shared) * self.pager.cfg.page_size,
-                           len(req.tokens) - 1)
-                self.slots[slot] = _SlotState(request=req, generated=[],
-                                              committed=skip)
-                self.stats.prefill_tokens_skipped += skip
-                continue
-            # one-shot: fused prefill + commit + first-token sample now
-            tok = int(self._prefill_commit(req, slot, pages, len(shared)))
-            if req.prefix_id is not None:
-                self.pager.register_prefix(slot, req.tokens, req.prefix_id)
-            st = _SlotState(request=req, generated=[tok],
-                            committed=len(req.tokens))
-            self.slots[slot] = st
-            events.append((req.rid, tok))
-            if st.done:
-                self._finish(slot)
+                if self.preemption and self._preempt_one(below=req.priority):
+                    continue
+                return
+            self._admit_head(req, shared, events)
+
+    def _admit_head(self, req: Request, shared: list[int],
+                    events: list[tuple[int, int]]) -> None:
+        assert self.queue.popleft() is req
+        slot, pages = self.pager.alloc_slot(len(req.tokens),
+                                            req.max_new_tokens,
+                                            shared_pages=shared)
+        self.stats.prefix_shared_pages += len(shared)
+        self.stats.admitted += 1
+        if self.chunked:
+            # aliased tokens are already resident: chunking starts past
+            # them (at least the final prompt token always runs, so the
+            # first-token logits exist even for a fully aliased prompt)
+            skip = min(len(shared) * self.pager.cfg.page_size,
+                       len(req.tokens) - 1)
+            self.slots[slot] = _SlotState(request=req, generated=[],
+                                          committed=skip)
+            self.stats.prefill_tokens_skipped += skip
+            return
+        # one-shot: fused prefill + commit + first-token sample now
+        tok = int(self._prefill_commit(req, slot, pages, len(shared)))
+        if req.prefix_id is not None:
+            self.pager.register_prefix(slot, req.tokens, req.prefix_id)
+        st = _SlotState(request=req, generated=[tok],
+                        committed=len(req.tokens))
+        self.slots[slot] = st
+        events.append((req.rid, tok))
+        if st.done:
+            self._finish(slot)
+
+    # ------------------------------------------------- preemption machinery
+    def _spill_slot(self, slot: int, *, pressure: bool = False) -> None:
+        """Evict an active slot to the host tier, parking its state.
+
+        Order matters: the engine's ``spill_fn`` gathers the evicted
+        pages' bytes off the device BEFORE `KVPager.spill` releases those
+        pages for reuse — JAX's functional arrays make the gathered value
+        immune to later cache updates, so the copy may complete
+        asynchronously while decode keeps dispatching.
+        """
+        st = self.slots.pop(slot)
+        ids = self.pager.peek_spill(slot)
+        handle = self._spill_fn(ids) \
+            if (self._spill_fn is not None and ids) else None
+        rec = self.pager.spill(slot)
+        assert len(rec.spilled_pages) == len(ids)
+        self.preempted.append(_Preempted(state=st, record=rec,
+                                         handle=handle,
+                                         seq=self._preempt_seq))
+        self._preempt_seq += 1
+        self.stats.preemptions += 1
+        self.stats.spilled_pages += len(ids)
+        if pressure:
+            self.stats.pressure_spills += 1
+
+    def _pick_victim(self, *, below: int | None,
+                     keep_one: bool = False) -> int | None:
+        """Victim choice: lowest priority, then most pages held (frees the
+        most pool), then least progress (closest-to-done slots finish and
+        free everything anyway). ``below`` restricts to strictly lower
+        classes; ``keep_one`` never empties the active set (pressure
+        relief must leave a slot to make progress)."""
+        cand = [
+            (st.request.priority, -len(self.pager.slot_pages[slot]),
+             len(st.generated) / st.request.max_new_tokens, slot)
+            for slot, st in self.slots.items()
+            if below is None or st.request.priority < below]
+        if not cand or (keep_one and len(self.slots) <= 1):
+            return None
+        return min(cand)[-1]
+
+    def _preempt_one(self, *, below: int) -> bool:
+        victim = self._pick_victim(below=below)
+        if victim is None:
+            return False
+        self._spill_slot(victim)
+        return True
+
+    def _try_restore(self, p: _Preempted) -> bool:
+        """Re-admit a parked request if capacity allows: pager restore,
+        then the engine scatters the host-tier bytes into the fresh
+        pages. The slot resumes exactly where it was spilled — the commit
+        watermark came back with the record, so nothing re-prefills."""
+        if not self.pager.can_restore(p.record):
+            return False
+        t0 = time.perf_counter()
+        slot, fresh = self.pager.restore(p.record)
+        if self._restore_fn is not None and p.handle is not None:
+            self._restore_fn(p.handle, fresh)
+        self.stats.restore_time_s += time.perf_counter() - t0
+        self.stats.restores += 1
+        self.stats.restored_pages += len(fresh)
+        self.slots[slot] = p.state
+        self.preempted.remove(p)
+        return True
+
+    def _relieve_pressure(self, drafts: dict[int, list[int]]) -> None:
+        """Optimistic admission's safety valve, run before packing a
+        chunked step: if the decode/verify extends this step will draw
+        more pages than the free pool holds, spill victims (any class —
+        pool pressure outranks SLO) until the step fits. Victims lose
+        their draft proposals along with their row."""
+        if not self.pager.cfg.optimistic:
+            return
+        pager = self.pager
+        while True:
+            need = 0
+            for slot, st in self.slots.items():
+                if st.prefilling:
+                    continue
+                n = 1 + len(drafts.get(slot, ()))
+                short = (pager.pages_for(st.next_pos + n)
+                         - len(pager.slot_pages[slot]))
+                if short > 0:
+                    need += max(0, short - pager.slot_reserved.get(slot, 0))
+            if need <= len(pager.free_pages) - pager._reserved:
+                return
+            victim = self._pick_victim(below=None, keep_one=True)
+            if victim is None:
+                return      # last slot: fits() guarantees the pool covers it
+            drafts.pop(victim, None)
+            self._spill_slot(victim, pressure=True)
+
+    def preempt_request(self, rid: int) -> bool:
+        """Spill the active slot serving ``rid`` (test/ops hook; organic
+        preemption is priority-driven). Returns False when ``rid`` is not
+        currently on a slot (queued, parked, finished, or unknown)."""
+        if not self.preemption:
+            raise ValueError("preemption is not enabled on this scheduler")
+        for slot, st in self.slots.items():
+            if st.request.rid == rid:
+                self._spill_slot(slot)
+                return True
+        return False
 
     # ---------------------------------------------------- speculative drafts
     def _propose_drafts(self) -> dict[int, list[int]]:
@@ -445,9 +654,15 @@ class Scheduler:
         `width_family` × context buckets.
         """
         b = self.num_slots
-        prefilling = [s for s, st in self.slots.items() if st.prefilling]
         drafts = self._propose_drafts() if self.spec_decode is not None \
             else {}
+        if self.preemption:
+            # optimistic admission: make sure this step's extends fit the
+            # free pool BEFORE packing rows (victims lose their row)
+            self._relieve_pressure(drafts)
+            if not self.slots:
+                return
+        prefilling = [s for s, st in self.slots.items() if st.prefilling]
         want = 1
         for slot, st in self.slots.items():
             if not st.prefilling:

@@ -105,7 +105,8 @@ from repro.serving import GenerationEngine
 # `main` exits non-zero either way
 REQUIRED_IDENTITY = ("chunked_vs_oneshot_vs_generate", "spec_vs_plain",
                      "sharded_vs_unsharded", "awq_kernel_vs_ref",
-                     "preempt_vs_uninterrupted")
+                     "preempt_vs_uninterrupted", "tree_vs_plain",
+                     "parallel_vs_single")
 
 NUM_REQUESTS = 16
 NUM_SLOTS = 4
@@ -489,6 +490,189 @@ def run_spec(m, params, csv_rows, identity, num_requests=8,
          "greedy spec streams ≡ plain chunked streams"),
     ])
     return res
+
+
+TREE_FANOUT = 2
+PARALLEL_N = 3
+
+
+def run_tree_spec(m, params, csv_rows, identity, num_requests=8,
+                  new_tokens=SPEC_NEW_TOKENS, k=SPEC_K,
+                  tag_prefix="serving/tree"):
+    """Tree speculation vs. linear speculation vs. plain decode.
+
+    Two bursts:
+
+    * the repetitive burst through the n-gram drafters — the tree
+      drafter proposes the primary chain plus depth-1 alternate first
+      tokens from older occurrence sites. Greedy tree streams are
+      asserted token-identical to the plain chunked engine (the gated
+      ``tree_vs_plain`` identity section).
+    * a *branchy* burst through a two-hypothesis hedged drafter that
+      backs the wrong branch on two verify passes out of three — the
+      regime hedging exists for. The linear drafter must commit to one
+      branch and loses its whole chain on a wrong guess; the tree
+      spends one node on the rival branch and salvages an accepted
+      token from the same weight pass, so it finishes the same streams
+      in strictly fewer dispatches (bench-asserted in ``__main__``).
+    """
+    import jax.numpy as jnp
+    wl = make_repetitive_workload(m.cfg, num_requests=num_requests,
+                                  new_tokens=new_tokens)
+    max_seq = max(len(p) for _, p, _ in wl) + new_tokens
+    max_seq += -max_seq % PAGE_SIZE
+    res: dict = {}
+    streams: dict = {}
+    for tag, kw in (
+            ("tree", {"spec_decode": "ngram", "spec_k": k,
+                      "spec_tree": True, "spec_tree_fanout": TREE_FANOUT}),
+            ("linear", {"spec_decode": "ngram", "spec_k": k}),
+            ("plain", {})):
+        eng = _fresh_engine(m, params, max_seq=max_seq, **kw)
+        rids = [eng.submit(p, mn) for _, p, mn in wl]
+        out = eng.drain()
+        st = eng.stats()
+        streams[tag] = [list(out[r]) for r in rids]
+        res[tag] = {"steps": st.dispatches,
+                    "acceptance": st.acceptance_rate,
+                    "tokens_per_step": st.spec_tokens_per_row,
+                    "drafted": st.draft_tokens,
+                    "accepted": st.accepted_tokens,
+                    "rollbacks": st.rollbacks,
+                    "fanout_now": st.spec_fanout_now}
+    identical = streams["tree"] == streams["plain"]
+    res["identical"] = identical
+    identity["tree_vs_plain"] = identical
+
+    # branchy burst: the drafter knows the continuation but hedges an
+    # uncertain first token (a branch point). Reference streams come from
+    # generate(), so both engines' drafters see the same two hypotheses.
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, m.cfg.vocab_size, (8,)).astype(np.int32)
+               for _ in range(min(num_requests, NUM_SLOTS))]
+    ref_eng = _fresh_engine(m, params, max_seq=max_seq)
+    refs = [np.asarray(ref_eng.generate({"tokens": jnp.asarray(p)[None, :]},
+                                        new_tokens)[0])
+            for p in prompts]
+
+    def _hedged(tree, oracle):
+        calls: dict = {}
+
+        def draft(reqs):
+            out = {}
+            for req in reqs:
+                slot, rid, ctx, kk = req[0], req[1], req[2], req[4]
+                ref, plen = oracle[rid]
+                done = len(ctx) - plen
+                true = [int(t) for t in ref[done:done + kk]]
+                if not true:
+                    continue
+                i = calls.get(rid, 0)
+                calls[rid] = i + 1
+                rival = (true[0] + 1) % m.cfg.vocab_size
+                wrong = i % 3 != 2          # backs the wrong branch 2/3
+                first = rival if wrong else true[0]
+                if tree:
+                    nodes = [(first, -1)]
+                    nodes += [(t, j) for j, t in enumerate(true[1:kk - 1])]
+                    if kk > 1:              # hedge: the rival first token
+                        nodes.append((true[0] if wrong else rival, -1))
+                    out[slot] = nodes
+                else:
+                    out[slot] = [first] + true[1:kk]
+            return out
+        return draft
+
+    branchy: dict = {}
+    bstreams: dict = {}
+    for tag, tree in (("tree", True), ("linear", False)):
+        oracle: dict = {}
+        kw = {"spec_decode": "draft_model", "spec_k": k,
+              "draft_fn": _hedged(tree, oracle)}
+        if tree:
+            kw |= {"spec_tree": True, "spec_tree_fanout": TREE_FANOUT}
+        eng = _fresh_engine(m, params, max_seq=max_seq, **kw)
+        rids = []
+        for p, ref in zip(prompts, refs):
+            rid = eng.submit(p, new_tokens)
+            oracle[rid] = (ref, len(p))
+            rids.append(rid)
+        out = eng.drain()
+        st = eng.stats()
+        bstreams[tag] = [list(out[r]) for r in rids]
+        branchy[tag] = {"steps": st.dispatches,
+                        "acceptance": st.acceptance_rate,
+                        "tokens_per_step": st.spec_tokens_per_row}
+    assert bstreams["tree"] == bstreams["linear"]
+    for s, ref in zip(bstreams["tree"], refs):
+        np.testing.assert_array_equal(s, ref[: len(s)])
+    res["branchy"] = branchy
+    csv_rows.extend([
+        (f"{tag_prefix}_acceptance_rate",
+         f"{res['tree']['acceptance']:.1%}",
+         f"{res['tree']['accepted']}/{res['tree']['drafted']} tree nodes "
+         f"accepted (ngram chain+alternates, k={k})"),
+        (f"{tag_prefix}_tokens_per_pass",
+         f"{res['tree']['tokens_per_step']:.2f}",
+         f"vs {res['linear']['tokens_per_step']:.2f} linear — tokens per "
+         f"verify weight pass, repetitive burst"),
+        (f"{tag_prefix}_dispatches", str(res["tree"]["steps"]),
+         f"vs {res['linear']['steps']} linear / "
+         f"{res['plain']['steps']} plain"),
+        (f"{tag_prefix}_fanout_now", str(res["tree"]["fanout_now"]),
+         "adaptive root fanout after the burst (1 = chain only)"),
+        (f"{tag_prefix}_branchy_dispatches", str(branchy["tree"]["steps"]),
+         f"vs {branchy['linear']['steps']} linear — hedged drafter wrong "
+         f"on 2/3 of passes; the depth-1 hedge must win"),
+        (f"{tag_prefix}_token_identity", str(identical),
+         "greedy tree-spec streams ≡ plain chunked streams"),
+    ])
+    return res
+
+
+def run_parallel(m, params, csv_rows, identity, n=PARALLEL_N,
+                 prompt_len=32, new_tokens=16,
+                 tag_prefix="serving/parallel"):
+    """``submit(n=…)`` parallel sampling: ``n`` continuations of one
+    prompt alias its physical prompt pages (refcounted, copy-on-write
+    partial tail) instead of prefilling and storing ``n`` copies.
+    Greedy siblings are asserted identical to ``n`` independent
+    submissions (the gated ``parallel_vs_single`` identity section);
+    the physical-page and prefill-FLOP savings are reported."""
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, m.cfg.vocab_size,
+                          (prompt_len,)).astype(np.int32)
+    eng_sep = _fresh_engine(m, params)
+    rids = [eng_sep.submit(prompt, new_tokens) for _ in range(n)]
+    out = eng_sep.drain()
+    sep = [list(out[r]) for r in rids]
+    st_sep = eng_sep.stats()
+    eng_par = _fresh_engine(m, params)
+    rids = eng_par.submit(prompt, new_tokens, n=n)
+    out = eng_par.drain()
+    par = [list(out[r]) for r in rids]
+    st_par = eng_par.stats()
+    identical = par == sep
+    identity["parallel_vs_single"] = identical
+    shared = st_par.prefix_shared_pages
+    page_bytes = eng_par.paged_kv_page_bytes()
+    csv_rows.extend([
+        (f"{tag_prefix}_shared_pages", str(shared),
+         f"physical prompt pages aliased across {n} siblings "
+         f"(vs {st_sep.prefix_shared_pages} with {n} separate submits)"),
+        (f"{tag_prefix}_kv_bytes_saved", str(shared * page_bytes),
+         f"{page_bytes} B/page × {shared} pages never duplicated"),
+        (f"{tag_prefix}_prefill_tokens_skipped",
+         str(st_par.prefill_tokens_skipped),
+         f"vs {st_sep.prefill_tokens_skipped} unshared — aliased prompt "
+         f"tokens never re-run through the weights"),
+        (f"{tag_prefix}_token_identity", str(identical),
+         f"greedy submit(n={n}) streams ≡ {n} independent submissions"),
+    ])
+    return {"identical": identical, "shared_pages": shared,
+            "sep_shared": st_sep.prefix_shared_pages,
+            "skipped": st_par.prefill_tokens_skipped,
+            "kv_bytes_saved": shared * page_bytes}
 
 
 def verify_token_identity(m, params, workload, identity):
@@ -932,6 +1116,10 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
                                     num_requests=3, new_tokens=8)
         spec = run_spec(m, params, csv_rows, identity, num_requests=4,
                         new_tokens=12, tag_prefix="serving/smoke_spec")
+        tree = run_tree_spec(m, params, csv_rows, identity, num_requests=4,
+                             new_tokens=12, tag_prefix="serving/smoke_tree")
+        par = run_parallel(m, params, csv_rows, identity, new_tokens=8,
+                           tag_prefix="serving/smoke_parallel")
         sharded = run_sharded(csv_rows, identity)
         awq = run_awq(m, params, csv_rows, identity, smoke=True)
         slo = run_slo(m, params, csv_rows, identity, smoke=True)
@@ -943,9 +1131,10 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             ("serving/smoke_token_identity", str(identical),
              "chunked ≡ one-shot ≡ generate()"),
         ])
-        return {"token_identical": identical, "spec": spec,
-                "padding": pack, "sharded": sharded, "awq": awq,
-                "slo": slo, "identity_sections": identity, **kv, **prefix}
+        return {"token_identical": identical, "spec": spec, "tree": tree,
+                "parallel": par, "padding": pack, "sharded": sharded,
+                "awq": awq, "slo": slo, "identity_sections": identity,
+                **kv, **prefix}
 
     workload = make_workload(cfg)
     su, sl, ss, sdt = run_static(_fresh_engine(m, params), workload)
@@ -959,6 +1148,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     kv = run_kv_quant(m, params, csv_rows)
     prefix = run_prefix_sharing(m, params, csv_rows)
     spec = run_spec(m, params, csv_rows, identity)
+    tree = run_tree_spec(m, params, csv_rows, identity)
+    par = run_parallel(m, params, csv_rows, identity)
     sharded = run_sharded(csv_rows, identity)
     awq = run_awq(m, params, csv_rows, identity)
     slo = run_slo(m, params, csv_rows, identity)
@@ -988,7 +1179,8 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             "static_p95": float(np.percentile(sl, 95)),
             "continuous_p95": float(np.percentile(cl, 95)),
             "ttft_p95": float(np.percentile(ct, 95)),
-            "token_identical": identical, "spec": spec, "padding": pack,
+            "token_identical": identical, "spec": spec, "tree": tree,
+            "parallel": par, "padding": pack,
             "sharded": sharded, "awq": awq, "slo": slo,
             "identity_sections": identity, **convoy, **kv, **prefix}
 
@@ -1062,6 +1254,22 @@ if __name__ == "__main__":
     assert out["spec"]["spec"]["drafted"] > 0
     assert 0 <= out["spec"]["spec"]["accepted"] \
         <= out["spec"]["spec"]["drafted"]
+    # tree speculation: the ngram tree drafter actually fired, and on the
+    # branchy burst the depth-1 hedge beats linear speculation outright —
+    # the same streams in strictly fewer weight passes
+    tr = out["tree"]
+    assert tr["identical"]
+    assert tr["tree"]["drafted"] > 0
+    assert 0 <= tr["tree"]["accepted"] <= tr["tree"]["drafted"]
+    assert tr["branchy"]["tree"]["steps"] < tr["branchy"]["linear"]["steps"]
+    assert tr["branchy"]["tree"]["tokens_per_step"] \
+        > tr["branchy"]["linear"]["tokens_per_step"]
+    # parallel sampling: siblings alias prompt pages and skip aliased
+    # prefill; n separate submissions alias nothing
+    par = out["parallel"]
+    assert par["identical"]
+    assert par["shared_pages"] > 0 and par["sep_shared"] == 0
+    assert par["skipped"] > 0
     # run-length packing can only remove padding vs the fixed-width policy
     assert out["padding"]["waste"] <= out["padding"]["waste_fixed"] + 1e-9
     # the packed weight stream must actually be smaller than the float one

@@ -54,11 +54,11 @@ def supported() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
-                       q_ref, k_ref, ks_ref, v_ref, vs_ref,
+def _paged_attn_kernel(tables_ref, pos_ref, rpos_ref,  # scalar prefetch
+                       q_ref, k_ref, ks_ref, v_ref, vs_ref, am_ref,
                        o_ref, m_ref, l_ref, acc_ref, *,
                        page_size: int, n_blocks: int, n_chunk: int,
-                       n_groups: int, scale: float):
+                       n_groups: int, scale: float, window: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -88,7 +88,25 @@ def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
         q_pos = jnp.where(rows == cc, pos_ref[b * n_chunk + cc], q_pos)
     k_pos = j * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, 1)                             # [gp, P]
-    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    # three-part visibility (see kernels.ref.chunk_visibility_ref):
+    #   committed pages — causal watermark test against the row base
+    #   (everything below pos[b, 0] is committed KV), optionally bounded
+    #   below by the sliding window on the row's *logical* position;
+    #   in-span keys — the explicit [C, C] ancestor-mask block, selected
+    #   per slot offset with a static unroll (no VMEM gathers on TPU);
+    #   padding rows (q_pos = -1) — masked everywhere.
+    base = pos_ref[b * n_chunk]
+    committed = k_pos < base
+    if window:
+        r_pos = jnp.full((s.shape[0], 1), -1, jnp.int32)
+        for cc in range(n_chunk):
+            r_pos = jnp.where(rows == cc, rpos_ref[b * n_chunk + cc], r_pos)
+        committed = committed & (k_pos > r_pos - window)
+    am = am_ref[0]                                         # [gp, C] f32
+    in_span = jnp.zeros(s.shape, jnp.bool_)
+    for t in range(n_chunk):
+        in_span = in_span | ((k_pos == base + t) & (am[:, t:t + 1] > 0.5))
+    s = jnp.where((q_pos >= 0) & (committed | in_span), s, NEG_INF)
 
     m_prev = m_ref[...]                                    # [gp, 128] replicated
     l_prev = l_ref[...]
@@ -116,29 +134,63 @@ def _paged_attn_kernel(tables_ref, pos_ref,            # scalar prefetch
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+def default_amask(pos: jax.Array, window: int = 0) -> jax.Array:
+    """Plain-causal ancestor mask for a linear chunk: in-span token j is
+    visible to query i iff ``j <= i`` and token j is not padding, with
+    the in-span half of any sliding-window bound folded in (committed
+    pages get their window test inside the kernel)."""
+    c = pos.shape[1]
+    tri = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+    am = tri[None] & (pos >= 0)[:, None, :]                # [B, C, C]
+    if window:
+        am = am & (jnp.arange(c)[None, None, :]
+                   > jnp.arange(c)[None, :, None] - window)
+    return am
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("scale", "interpret"))
+                   static_argnames=("scale", "interpret", "window"))
 def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
                           v_pool: jax.Array, vs: jax.Array,
                           page_table: jax.Array, pos: jax.Array, *,
                           scale: float | None = None,
+                          rpos: jax.Array | None = None,
+                          amask: jax.Array | None = None,
+                          window: int = 0,
                           interpret: bool = False) -> jax.Array:
-    """Fused dequant + multi-query causal attention over int8 KV pages.
+    """Fused dequant + multi-query masked attention over int8 KV pages.
 
-    q ``[B, C, Hkv, G, hd]`` — C queries per row (prefill chunk; decode is
-    C = 1); k/v pools ``[N, P, Hkv, hd]`` int8; ks/vs ``[N, P, Hkv]`` f32;
-    page_table ``[B, pages_per_slot]`` int32 (one row per batch row — all
-    C queries of a row read the same slot's pages); pos ``[B, C]`` int32
-    per-query inclusive positions (``-1`` ⇒ padding query, output 0).
-    Returns ``[B, C, Hkv, G, hd]`` float32. Pages past a query's valid
-    range (stale table entries, the scratch page) hold positions
-    exceeding its ``pos`` and are causally masked, so they never leak
-    into the softmax.
+    q ``[B, C, Hkv, G, hd]`` — C queries per row (prefill chunk, token
+    tree, or decode at C = 1); k/v pools ``[N, P, Hkv, hd]`` int8; ks/vs
+    ``[N, P, Hkv]`` f32; page_table ``[B, pages_per_slot]`` int32 (one
+    row per batch row — all C queries of a row read the same slot's
+    pages); pos ``[B, C]`` int32 per-query inclusive **slot** positions
+    (``-1`` ⇒ padding query, output 0): in-span tokens always occupy
+    contiguous slots from the committed watermark ``pos[b, 0]``.
+    Returns ``[B, C, Hkv, G, hd]`` float32.
+
+    Mask semantics (`kernels.ref.chunk_visibility_ref` is the oracle):
+    committed pages — everything below ``pos[b, 0]`` — pass the causal
+    watermark test, bounded below by ``k > rpos[b, i] - window`` when a
+    sliding ``window`` is set (``rpos`` is the row's logical/RoPE
+    position, defaulting to ``pos``; the two differ only for tree rows).
+    In-span keys route through the explicit ``[B, C, C]`` ancestor-mask
+    block ``amask`` (plain causality when ``None``), which lets one
+    kernel serve linear chunks, speculation trees, and windowed reads.
+    Stale table tails and the scratch page sit above the watermark and
+    outside the span, so they never leak into the softmax.
     """
     b, c, hkv, g, hd = q.shape
     page_size = k_pool.shape[1]
     n_blocks = page_table.shape[1]
     scale = scale if scale is not None else hd ** -0.5
+    if rpos is None:
+        rpos = pos
+    if amask is None:
+        amask = default_amask(pos, window)
+    # expand query rows over GQA groups (row r = query r // G) and pad to
+    # the same gp row quantum as q — padded rows are all-masked anyway
+    am = jnp.repeat(amask.astype(jnp.float32), g, axis=1)  # [B, C·G, C]
     # fold the chunk into the row axis: row r = query (r // G) group (r % G);
     # pad rows to the fp32 sublane quantum so tiny chunks (C·G < 8) still
     # map onto full tiles — padded rows carry pos -1 and are sliced off
@@ -148,32 +200,39 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
     if gp != rows:
         qr = jnp.concatenate(
             [qr, jnp.zeros((b, hkv, gp - rows, hd), qr.dtype)], axis=2)
+        am = jnp.concatenate(
+            [am, jnp.zeros((b, gp - rows, c), am.dtype)], axis=1)
 
     grid = (b, hkv, n_blocks)
     kernel = functools.partial(_paged_attn_kernel, page_size=page_size,
                                n_blocks=n_blocks, n_chunk=c, n_groups=g,
-                               scale=scale)
+                               scale=scale, window=window)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, gp, hd),
-                         lambda bi, hi, ji, tables, pos_: (bi, hi, 0, 0)),
+                         lambda bi, hi, ji, tables, pos_, rpos_:
+                         (bi, hi, 0, 0)),
             pl.BlockSpec((1, page_size, 1, hd),
-                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
-                         (tables[bi * _nb + ji], 0, hi, 0)),
+                         lambda bi, hi, ji, tables, pos_, rpos_,
+                         _nb=n_blocks: (tables[bi * _nb + ji], 0, hi, 0)),
             pl.BlockSpec((1, page_size, 1),
-                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
-                         (tables[bi * _nb + ji], 0, hi)),
+                         lambda bi, hi, ji, tables, pos_, rpos_,
+                         _nb=n_blocks: (tables[bi * _nb + ji], 0, hi)),
             pl.BlockSpec((1, page_size, 1, hd),
-                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
-                         (tables[bi * _nb + ji], 0, hi, 0)),
+                         lambda bi, hi, ji, tables, pos_, rpos_,
+                         _nb=n_blocks: (tables[bi * _nb + ji], 0, hi, 0)),
             pl.BlockSpec((1, page_size, 1),
-                         lambda bi, hi, ji, tables, pos_, _nb=n_blocks:
-                         (tables[bi * _nb + ji], 0, hi)),
+                         lambda bi, hi, ji, tables, pos_, rpos_,
+                         _nb=n_blocks: (tables[bi * _nb + ji], 0, hi)),
+            pl.BlockSpec((1, gp, c),
+                         lambda bi, hi, ji, tables, pos_, rpos_:
+                         (bi, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, gp, hd),
-                               lambda bi, hi, ji, tables, pos_: (bi, hi, 0, 0)),
+                               lambda bi, hi, ji, tables, pos_, rpos_:
+                               (bi, hi, 0, 0)),
         scratch_shapes=[pltpu.VMEM((gp, 128), jnp.float32),
                         pltpu.VMEM((gp, 128), jnp.float32),
                         pltpu.VMEM((gp, hd), jnp.float32)],
@@ -187,7 +246,8 @@ def paged_attention_chunk(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(page_table.reshape(-1).astype(jnp.int32),
       pos.reshape(-1).astype(jnp.int32),
-      qr, k_pool, ks, v_pool, vs)
+      rpos.reshape(-1).astype(jnp.int32),
+      qr, k_pool, ks, v_pool, vs, am)
     out = out[:, :, :rows].reshape(b, hkv, c, g, hd)
     return jnp.moveaxis(out, 2, 1)
 
@@ -197,17 +257,22 @@ def paged_attention_chunk_sharded(q: jax.Array, k_pool: jax.Array,
                                   vs: jax.Array, page_table: jax.Array,
                                   pos: jax.Array, *, mesh,
                                   scale: float | None = None,
+                                  rpos: jax.Array | None = None,
+                                  amask: jax.Array | None = None,
+                                  window: int = 0,
                                   interpret: bool = False) -> jax.Array:
     """Tensor-parallel form: the chunk kernel under `shard_map` over the
     KV-head axis of the ``model`` mesh axis.
 
-    KV heads are independent throughout — the online softmax, the causal
-    mask, and the dequant all run per (batch, kv-head) grid cell — so
-    each mesh shard simply runs the unmodified kernel body over its local
-    ``Hkv / |model|`` heads of the pool (`distributed.paged_cache_pspec`
-    stripes the pools the same way) with ZERO cross-device communication
-    inside the kernel; the output concatenates back along heads. Page
-    tables and positions are replicated (page IDs are device-agnostic).
+    KV heads are independent throughout — the online softmax, the
+    watermark/ancestor mask, and the dequant all run per (batch, kv-head)
+    grid cell — so each mesh shard simply runs the unmodified kernel body
+    over its local ``Hkv / |model|`` heads of the pool
+    (`distributed.paged_cache_pspec` stripes the pools the same way) with
+    ZERO cross-device communication inside the kernel; the output
+    concatenates back along heads. Page tables, positions, and the
+    ancestor-mask block are replicated (page IDs and mask bits are
+    device-agnostic).
     """
     from jax.sharding import PartitionSpec as P
 
@@ -215,31 +280,42 @@ def paged_attention_chunk_sharded(q: jax.Array, k_pool: jax.Array,
 
     if mesh.shape.get("model", 1) == 1:
         return paged_attention_chunk(q, k_pool, ks, v_pool, vs, page_table,
-                                     pos, scale=scale, interpret=interpret)
+                                     pos, scale=scale, rpos=rpos,
+                                     amask=amask, window=window,
+                                     interpret=interpret)
+    if rpos is None:
+        rpos = pos
+    if amask is None:
+        amask = default_amask(pos, window)
     head = P(None, None, "model")                       # [N, P, Hkv]
     return shard_map(
-        lambda q_, k_, ks_, v_, vs_, t_, p_: paged_attention_chunk(
-            q_, k_, ks_, v_, vs_, t_, p_, scale=scale, interpret=interpret),
+        lambda q_, k_, ks_, v_, vs_, t_, p_, rp_, am_: paged_attention_chunk(
+            q_, k_, ks_, v_, vs_, t_, p_, scale=scale, rpos=rp_, amask=am_,
+            window=window, interpret=interpret),
         mesh=mesh,
         in_specs=(P(None, None, "model", None, None), P(*head, None), head,
-                  P(*head, None), head, P(None, None), P(None, None)),
+                  P(*head, None), head, P(None, None), P(None, None),
+                  P(None, None), P(None, None, None)),
         out_specs=P(None, None, "model", None, None),
         check_vma=False,
-    )(q, k_pool, ks, v_pool, vs, page_table, pos)
+    )(q, k_pool, ks, v_pool, vs, page_table, pos, rpos, amask)
 
 
 def paged_attention(q: jax.Array, k_pool: jax.Array, ks: jax.Array,
                     v_pool: jax.Array, vs: jax.Array,
                     page_table: jax.Array, pos: jax.Array, *,
                     scale: float | None = None,
+                    window: int = 0,
                     interpret: bool = False) -> jax.Array:
     """Single-token decode form: q ``[B, Hkv, G, hd]``, pos ``[B]``.
 
     Thin wrapper over `paged_attention_chunk` with a chunk of one — the
     decode hot path and the chunked-prefill path share one kernel body.
-    Returns ``[B, Hkv, G, hd]`` float32.
+    At C = 1 slot and logical positions coincide, so ``pos`` serves as
+    both the watermark and the window anchor. Returns ``[B, Hkv, G, hd]``
+    float32.
     """
     out = paged_attention_chunk(q[:, None], k_pool, ks, v_pool, vs,
                                 page_table, pos[:, None], scale=scale,
-                                interpret=interpret)
+                                window=window, interpret=interpret)
     return out[:, 0]

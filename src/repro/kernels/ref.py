@@ -76,22 +76,70 @@ def paged_attention_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
     return jnp.einsum("bkgs,bskd->bkgd", p, v)
 
 
+def chunk_visibility_ref(pos, *, s_slot, rpos=None, amask=None,
+                         window: int = 0):
+    """Shared mask semantics for the generalized chunk attention read.
+
+    Returns the boolean visibility ``[B, C, S_slot]`` of every slot
+    position to every in-span query under the three-part rule:
+
+      * **committed span** (``k < pos[b, 0]``): visible when inside the
+        sliding window, ``k > rpos[b, i] - window`` (always, if
+        ``window == 0``) — the causal watermark test;
+      * **in-span** (``pos[b, 0] <= k < pos[b, 0] + C``): visible iff
+        ``amask[b, i, k - pos[b, 0]]`` — the explicit ancestor-mask
+        block (callers fold any in-span window bound into ``amask``);
+      * everything else (future slots, stale table tails): masked.
+
+    ``pos[b, i]`` is token *i*'s KV **slot** position — in-span tokens
+    always occupy contiguous slots from the committed watermark
+    ``pos[b, 0]`` (``-1`` marks padding). ``rpos`` is the **logical**
+    (RoPE/depth) position, defaulting to ``pos``; the two differ only
+    for tree-speculation rows, where siblings share a depth but not a
+    slot. ``amask=None`` reproduces plain causality: in-span token j
+    visible to query i iff ``j <= i`` and token j is not padding.
+    """
+    b, c = pos.shape
+    if rpos is None:
+        rpos = pos
+    if amask is None:
+        tri = (jnp.arange(c)[:, None] >= jnp.arange(c)[None, :])
+        amask = tri[None] & (pos >= 0)[:, None, :]         # [B, C, C]
+        if window:
+            amask = amask & (jnp.arange(c)[None, None, :]
+                             > jnp.arange(c)[None, :, None] - window)
+    base = pos[:, 0][:, None, None]                        # [B, 1, 1]
+    k_slot = jnp.arange(s_slot)[None, None, :]             # [1, 1, S]
+    committed = k_slot < base
+    if window:
+        committed = committed & (k_slot > rpos[:, :, None] - window)
+    off = k_slot - base                                    # [B, 1, S]
+    in_span = (off >= 0) & (off < c)
+    offc = jnp.clip(off, 0, c - 1)
+    vis_in = jnp.take_along_axis(
+        amask.astype(bool), jnp.broadcast_to(offc, (b, c, s_slot)), axis=2)
+    return (pos >= 0)[:, :, None] & (committed | (in_span & vis_in))
+
+
 def paged_attention_chunk_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
-                              scale=None):
+                              scale=None, rpos=None, amask=None,
+                              window: int = 0):
     """Oracle for the multi-query (chunked-prefill) paged-attention kernel.
 
-    q [B, C, Hkv, G, hd] — C queries per batch row (a prefill chunk, or a
-    single decode token at C=1); k/v pools [N, P, Hkv, hd] int8 with
-    ks/vs [N, P, Hkv] f32 scale strips; page_table [B, pages_per_slot]
-    int32 (one table row per batch row — all C queries of a row belong to
-    the same request slot); pos [B, C] int32 absolute query positions,
-    ``-1`` marking padding queries (masked everywhere, output zero).
+    q [B, C, Hkv, G, hd] — C queries per batch row (a prefill chunk, a
+    speculation tree, or a single decode token at C=1); k/v pools
+    [N, P, Hkv, hd] int8 with ks/vs [N, P, Hkv] f32 scale strips;
+    page_table [B, pages_per_slot] int32 (one table row per batch row —
+    all C queries of a row belong to the same request slot); pos [B, C]
+    int32 absolute query **slot** positions, ``-1`` marking padding
+    queries (masked everywhere, output zero).
 
-    Each query attends causally over its slot's committed pages:
-    ``k_pos <= pos[b, c]``. Every position at or below a valid query's
-    position holds real committed KV (earlier chunks, aliased
-    shared-prefix pages, or this chunk's own tokens written before the
-    read), so the arange-based mask is exact.
+    Visibility follows `chunk_visibility_ref`: committed pages pass the
+    causal watermark (+ optional sliding-window) test, in-span keys pass
+    through the explicit ``[C, C]`` ancestor-mask block (plain causality
+    when ``amask=None``). Rows whose mask is empty — padding queries or
+    all-masked ancestor rows — produce exactly 0, matching the kernel's
+    ``l == 0`` flush.
     """
     b, c, hkv, g, hd = q.shape
     page_size = k_pool.shape[1]
@@ -104,12 +152,17 @@ def paged_attention_chunk_ref(q, k_pool, ks, v_pool, vs, page_table, pos, *,
     k = k.reshape(b, s_slot, hkv, hd)
     v = v.reshape(b, s_slot, hkv, hd)
     sc = jnp.einsum("bckgd,bskd->bckgs", q.astype(jnp.float32), k) * scale
-    causal = (jnp.arange(s_slot)[None, None, :]
-              <= pos[:, :, None])                          # [B, C, S]
-    sc = jnp.where(causal[:, :, None, None, :], sc, -1e30)
-    p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bckgs,bskd->bckgd", p, v)
-    return jnp.where((pos >= 0)[:, :, None, None, None], out, 0.0)
+    vis = chunk_visibility_ref(pos, s_slot=s_slot, rpos=rpos, amask=amask,
+                               window=window)              # [B, C, S]
+    vism = vis[:, :, None, None, :]
+    sc = jnp.where(vism, sc, -1e30)
+    # masked-row-exact-zero softmax: rows with an empty mask keep l = 0
+    # and flush to 0 instead of averaging garbage
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.where(vism, jnp.exp(sc - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    return jnp.einsum("bckgs,bskd->bckgd", p, v)
 
 
 def flash_attention_ref(q, k, v, *, scale=None, causal=True,

@@ -84,14 +84,27 @@ def _project_qkv(p, x, cfg, positions, window, name):
 
 
 def _sdpa(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
-          scale: float) -> jax.Array:
+          scale: float, vis: jax.Array | None = None) -> jax.Array:
     """Grouped scaled-dot-product attention over full key rows.
 
     q [B, C, Hkv, G, hd]; k/v [B, S, Hkv, hd]; *_pos [B, C]/[B, S] absolute
     positions (k_pos < 0 ⇒ invalid slot). Returns [B, C, Hkv, G, hd].
+
+    An explicit ``vis [B, C, S]`` boolean mask overrides the positional
+    causal/window mask entirely (the generalized ancestor-mask read);
+    rows whose mask is empty then produce exactly 0, matching the Pallas
+    kernel's ``l == 0`` flush.
     """
     scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
                         preferred_element_type=jnp.float32) * scale
+    if vis is not None:
+        vism = vis[:, None, None, :, :]
+        scores = jnp.where(vism, scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.where(vism, jnp.exp(scores - m), 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        probs = (p / jnp.where(l == 0.0, 1.0, l)).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
     mask = k_pos[:, None, :] >= 0
     if causal:
         mask &= k_pos[:, None, :] <= q_pos[:, :, None]
@@ -262,28 +275,39 @@ def init_paged_kv_cache(cfg, num_pages: int, page_size: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
+def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, rpos=None,
+                          amask=None, window: int = 0, name=None):
     """Token-budget chunk step against a paged KV pool — the unified
     prefill/decode execution path.
 
     x ``[B, C, D]`` — each batch row is one request slot's contribution to
-    this step: a prefill chunk of up to C tokens, a single decode token
-    (remaining positions padded), or nothing (all padding). pos ``[B, C]``
-    int32 absolute positions, ``-1`` marking padding tokens; page_table
+    this step: a prefill chunk of up to C tokens, a speculation tree, a
+    single decode token (remaining positions padded), or nothing (all
+    padding). pos ``[B, C]`` int32 absolute KV **slot** positions, ``-1``
+    marking padding tokens (in-span tokens always occupy contiguous slots
+    from the committed watermark ``pos[b, 0]``); page_table
     ``[B, pages_per_slot]`` int32 (row = slot). Returns (y [B, C, D],
     new pool).
+
+    ``rpos`` is the **logical** position (RoPE angle + window anchor),
+    defaulting to ``pos`` — the two differ only for tree-speculation
+    rows, where sibling branches share a depth but not a slot. ``amask``
+    ``[B, C, C]`` is the explicit intra-chunk ancestor-mask block (plain
+    causality when ``None``); ``window`` masks committed positions that
+    have slid out of a local-attention layer's window (their pages stay
+    resident — the mask, not eviction, enforces locality, which is what
+    lets windowed layers share the paged pools with global layers).
 
     Execution order is scatter-then-gather: every valid token's K/V is
     written into ``pool[table[b, pos // P], pos % P]`` first (padding
     redirected to the reserved scratch page 0), then each token attends
-    causally (``k_pos <= pos``) over its slot's pages. Because a chunk's
-    own tokens are committed before the read, intra-chunk causality falls
-    out of the same mask that covers previously committed pages — decode
-    tokens, earlier chunks, and **aliased shared-prefix pages**, which are
-    therefore read, never recomputed (prefix sharing saves prefill FLOPs,
-    not just memory). Every position ≤ a valid query's pos holds real
-    committed KV, so the arange-based mask is exact; stale table entries
-    hold positions beyond pos and are causally masked.
+    over its slot's pages under the three-part visibility rule of
+    `kernels.ref.chunk_visibility_ref`: committed pages pass the causal
+    watermark (+ window) test — decode tokens, earlier chunks, and
+    **aliased shared-prefix pages**, which are therefore read, never
+    recomputed (prefix sharing saves prefill FLOPs, not just memory) —
+    and in-span keys route through ``amask``. Stale table entries hold
+    positions beyond the watermark + span and are always masked.
 
     Int8 pools quantize each token on write with the per-(position, head)
     absmax codec — identical to one-shot quantize-on-commit, so chunked
@@ -297,13 +321,23 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     b, c, _ = x.shape
     page_size = pool["k"].shape[1]
     valid = pos >= 0
-    rope_pos = jnp.where(valid, pos, 0)
-    q, k1, v1 = _project_qkv(p, x, cfg, rope_pos, 0, name)  # [B, C, H(kv), hd]
+    logical = pos if rpos is None else rpos
+    rope_pos = jnp.where(valid, logical, 0)
+    if amask is not None and window:
+        # a supplied ancestor mask is authoritative for in-span keys (the
+        # kernel applies ``window`` only to committed pages), so fold the
+        # in-span locality bound in here — once, above both read paths.
+        # Logical positions anchor the bound: tree siblings share a depth.
+        amask = (amask.astype(jnp.bool_)
+                 & (rope_pos[:, None, :] > rope_pos[:, :, None] - window))
+    q, k1, v1 = _project_qkv(p, x, cfg, rope_pos, window,
+                             name)                        # [B, C, H(kv), hd]
     k1 = constrain(k1, ("batch", None, "kv_heads", None))
     v1 = constrain(v1, ("batch", None, "kv_heads", None))
-    phys = jnp.take_along_axis(page_table, rope_pos // page_size, axis=1)
+    slot_pos = jnp.where(valid, pos, 0)
+    phys = jnp.take_along_axis(page_table, slot_pos // page_size, axis=1)
     phys = jnp.where(valid, phys, 0)          # padding → scratch page 0
-    offset = jnp.where(valid, rope_pos % page_size, 0)
+    offset = jnp.where(valid, slot_pos % page_size, 0)
     fp, fo = phys.reshape(-1), offset.reshape(-1)
     quant = "ks" in pool
     new_pool = {}
@@ -343,11 +377,13 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
                 out = paged_kernel.paged_attention_chunk_sharded(
                     qk, new_pool["k"], new_pool["ks"], new_pool["v"],
                     new_pool["vs"], page_table, pos, mesh=mesh,
+                    rpos=rpos, amask=amask, window=window,
                     scale=cfg.head_dim ** -0.5)
             else:
                 out = paged_kernel.paged_attention_chunk(
                     qk, new_pool["k"], new_pool["ks"], new_pool["v"],
                     new_pool["vs"], page_table, pos,
+                    rpos=rpos, amask=amask, window=window,
                     scale=cfg.head_dim ** -0.5)
             out = out.reshape(b, c, cfg.q_dim).astype(
                 jnp.dtype(cfg.activation_dtype))
@@ -373,14 +409,23 @@ def attention_chunk_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     k_pos = jnp.broadcast_to(jnp.arange(s_slot)[None, :], (b, s_slot))
     qg = q.reshape(b, c, cfg.num_kv_heads, g, cfg.head_dim)
     qg = constrain(qg, ("batch", None, "kv_heads", None, None))
-    out = _sdpa(qg, ck, cv, pos, k_pos, causal=True, window=0,
-                scale=cfg.head_dim ** -0.5)
+    if rpos is None and amask is None and not window:
+        # plain linear chunk: the arange causal mask is exact (see above)
+        out = _sdpa(qg, ck, cv, pos, k_pos, causal=True, window=0,
+                    scale=cfg.head_dim ** -0.5)
+    else:
+        from repro.kernels.ref import chunk_visibility_ref
+        vis = chunk_visibility_ref(pos, s_slot=s_slot, rpos=rpos,
+                                   amask=amask, window=window)
+        out = _sdpa(qg, ck, cv, pos, k_pos, causal=True, window=0,
+                    scale=cfg.head_dim ** -0.5, vis=vis)
     out = out.reshape(b, c, cfg.q_dim)
     y = linear(p["wo"], out, nm("wo"))
     return y, new_pool
 
 
-def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
+def attention_decode_paged(p, pool, page_table, x, cfg, *, pos,
+                           window: int = 0, name=None):
     """Single-token decode against a paged KV pool: the C = 1 form of
     `attention_chunk_paged` (one implementation serves both regimes).
 
@@ -390,10 +435,12 @@ def attention_decode_paged(p, pool, page_table, x, cfg, *, pos, name=None):
     ``k_pos <= pos`` decode mask at C = 1, so the gathered logical view
     stays laid out like the dense ``[B, S, Hkv, hd]`` cache and paged and
     dense decode produce bitwise-identical attention outputs (same kv
-    regime).
+    regime). A sliding ``window`` masks committed positions at or below
+    ``pos - window`` in the paged read (pages stay resident).
     """
     y, new_pool = attention_chunk_paged(p, pool, page_table, x[:, None],
-                                        cfg, pos=pos[:, None], name=name)
+                                        cfg, pos=pos[:, None], window=window,
+                                        name=name)
     return y[:, 0], new_pool
 
 

@@ -100,7 +100,17 @@ def init_block_cache_paged(cfg, kind: LayerKind, num_slots: int,
     keeps the config's regime.
     """
     c: dict = {}
-    if kind.mixer in ("attn", "hymba"):
+    if kind.mixer == "attn":
+        # sliding-window layers share the page pools with global layers:
+        # the paged read masks positions that slid out of the window (the
+        # mask, not eviction, enforces locality), so windowed archs ride
+        # the chunked serving path — mesh, spec decode, preemption — with
+        # no dense ring special case
+        c["kv_pool"] = attn_mod.init_paged_kv_cache(
+            cfg, num_pages, page_size, dtype, kv_quant=kv_quant)
+    elif kind.mixer == "hymba":
+        # hymba keeps per-slot SSM state → one-shot path; its windowed
+        # attention branch keeps the dense ring alongside
         if kind.window:
             c["kv"] = attn_mod.init_kv_cache(cfg, num_slots, slot_seq,
                                              kind.window, dtype)
@@ -147,15 +157,18 @@ def _attn_decode(p, cache, x, cfg, kind: LayerKind, pos, page_table):
     """Dispatch dense/ring vs. paged full-attention decode by cache key."""
     if "kv_pool" in cache:
         y, pool = attn_mod.attention_decode_paged(p["attn"], cache["kv_pool"],
-                                                  page_table, x, cfg, pos=pos)
+                                                  page_table, x, cfg, pos=pos,
+                                                  window=kind.window)
         return y, ("kv_pool", pool)
     y, kv = attn_mod.attention_decode(p["attn"], cache["kv"], x, cfg,
                                       pos=pos, window=kind.window)
     return y, ("kv", kv)
 
 
-def _mixer_chunk(p, cache, x, cfg, kind: LayerKind, pos, name, page_table):
-    """Chunked (multi-token) mixer step — full paged attention only."""
+def _mixer_chunk(p, cache, x, cfg, kind: LayerKind, pos, name, page_table,
+                 rpos=None, amask=None):
+    """Chunked (multi-token) mixer step — paged attention only (global or
+    sliding-window; locality comes from the masked read)."""
     if kind.mixer != "attn" or "kv_pool" not in cache:
         raise ValueError(
             f"chunked execution needs a pure paged-attention cache; "
@@ -164,7 +177,8 @@ def _mixer_chunk(p, cache, x, cfg, kind: LayerKind, pos, name, page_table):
     sub = (lambda s: name(f"attn/{s}")) if name else None
     y, pool = attn_mod.attention_chunk_paged(p["attn"], cache["kv_pool"],
                                              page_table, x, cfg, pos=pos,
-                                             name=sub)
+                                             rpos=rpos, amask=amask,
+                                             window=kind.window, name=sub)
     return y, {"kv_pool": pool}
 
 
@@ -203,7 +217,8 @@ def _mlp_apply(p, x, cfg, kind: LayerKind, name):
 
 
 def block_apply(p, x, cfg, kind: LayerKind, *, mode: str, positions=None,
-                cache=None, name=None, page_table=None):
+                cache=None, name=None, page_table=None, rpos=None,
+                amask=None):
     """Returns (x_out, cache_out, aux_loss). name: callable local→str or None."""
     h = norm(p["pre_norm"], x, cfg)
     if mode == "decode":
@@ -211,7 +226,7 @@ def block_apply(p, x, cfg, kind: LayerKind, *, mode: str, positions=None,
                                  page_table)
     elif mode == "chunk":
         y, cache = _mixer_chunk(p, cache, h, cfg, kind, positions, name,
-                                page_table)
+                                page_table, rpos, amask)
     else:
         y = _mixer_train(p, h, cfg, kind, positions, name)
         if mode == "prefill" and kind.mixer in ("attn", "mla", "hymba"):

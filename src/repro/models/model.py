@@ -194,26 +194,31 @@ class Model:
     def chunk_step(self, params, cache: Any, tokens: jax.Array,
                    pos: jax.Array, sample_idx: jax.Array,
                    page_table: jax.Array,
-                   num_logits: int = 1) -> tuple[jax.Array, Any]:
+                   num_logits: int = 1, rpos: jax.Array | None = None,
+                   amask: jax.Array | None = None) -> tuple[jax.Array, Any]:
         """One token-budget step: the serving engine's unified
         prefill-chunk + decode dispatch.
 
         tokens ``[B, C]`` int32 — row b is slot b's contribution (a
-        prefill chunk, a variable-length decode/verify token run, or
-        padding); pos ``[B, C]`` absolute positions with ``-1`` padding;
-        sample_idx ``[B]`` — the first in-row index whose logits feed
-        sampling (a decode token's successor, or the first token when a
-        row's last prompt chunk lands); page_table
-        ``[B, pages_per_slot]``. ``num_logits`` (static) is the number of
-        consecutive in-row positions whose logits are materialized,
-        starting at ``sample_idx`` and clipped to the row — speculative
-        verify runs need the distribution after every draft token, plain
-        decode needs one. Returns (logits [B, V] for ``num_logits == 1``
-        or [B, num_logits, V] otherwise, cache) — the full ``[B, C, V]``
-        logits are never materialized.
+        prefill chunk, a variable-length decode/verify token run, a
+        speculation tree, or padding); pos ``[B, C]`` absolute KV slot
+        positions with ``-1`` padding; sample_idx ``[B]`` — the first
+        in-row index whose logits feed sampling (a decode token's
+        successor, or the first token when a row's last prompt chunk
+        lands); page_table ``[B, pages_per_slot]``. ``num_logits``
+        (static) is the number of consecutive in-row positions whose
+        logits are materialized, starting at ``sample_idx`` and clipped
+        to the row — speculative verify runs need the distribution after
+        every draft token, plain decode needs one. ``rpos``/``amask``
+        carry the logical positions and intra-chunk ancestor-mask block
+        for tree-speculation rows (see `attention.attention_chunk_paged`);
+        ``None`` keeps plain linear-chunk semantics. Returns (logits
+        [B, V] for ``num_logits == 1`` or [B, num_logits, V] otherwise,
+        cache) — the full ``[B, C, V]`` logits are never materialized.
 
         Only supported for caches whose every entry is a ``kv_pool``
-        (pure full-attention archs); see `blocks._mixer_chunk`.
+        (full-attention archs, global or sliding-window); see
+        `blocks._mixer_chunk`.
         """
         cfg = self.cfg
         adt = jnp.dtype(cfg.activation_dtype)
@@ -225,7 +230,8 @@ class Model:
         x = constrain(x, ("batch", None, None))
         x, cache, _ = stack.stack_apply(params["segments"], x, cfg,
                                         mode="chunk", positions=pos,
-                                        cache=cache, page_table=page_table)
+                                        cache=cache, page_table=page_table,
+                                        rpos=rpos, amask=amask)
         x = norm(params["final_norm"], x, cfg)
         c = x.shape[1]
         if num_logits == 1:

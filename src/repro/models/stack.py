@@ -64,12 +64,15 @@ def _take(tree, i):
 
 
 def stack_apply(params, x, cfg, *, mode: str, positions, cache=None,
-                page_table=None):
+                page_table=None, rpos=None, amask=None):
     """Run all segments. Returns (x, cache_out, aux_loss_sum).
 
     ``page_table`` ([B, pages_per_slot] int32) is only consulted by paged
     decode caches (``kv_pool`` entries); it is layer-invariant, so the scan
-    closes over it rather than scanning it.
+    closes over it rather than scanning it. ``rpos`` ([B, C] logical
+    positions) and ``amask`` ([B, C, C] intra-chunk ancestor mask) ride
+    the same way for chunk mode (tree-speculation rows); ``None`` keeps
+    plain linear-chunk semantics.
     """
     segs = cfg.segments()
     aux_total = jnp.zeros((), jnp.float32)
@@ -88,7 +91,7 @@ def stack_apply(params, x, cfg, *, mode: str, positions, cache=None,
                 x, c_new, aux = blocks.block_apply(
                     _take(p_seg, i), x, cfg, kind, mode=mode,
                     positions=positions, cache=c_i, name=nm,
-                    page_table=page_table)
+                    page_table=page_table, rpos=rpos, amask=amask)
                 aux_total += aux
                 new_layers.append(c_new)
             if cache_out is not None:
@@ -105,7 +108,7 @@ def stack_apply(params, x, cfg, *, mode: str, positions, cache=None,
             p_i, c_i = xs
             xc, c_new, aux = blocks.block_apply(
                 p_i, xc, cfg, _kind, mode=mode, positions=positions,
-                cache=c_i, page_table=page_table)
+                cache=c_i, page_table=page_table, rpos=rpos, amask=amask)
             return (xc, aux_c + aux), c_new
 
         if cfg.remat and mode == "train":

@@ -110,6 +110,7 @@ class EngineStats:
     accepted_tokens: int
     rollbacks: int
     spec_k_now: int               # current draft length (adaptive)
+    spec_fanout_now: int          # current tree root fanout (1 = linear)
     # SLO preemption / host KV tier
     preemptions: int              # slots spilled to the host tier
     pressure_spills: int          # spills by optimistic-admission pressure
@@ -129,6 +130,112 @@ class EngineStats:
     # amortized over spec-accepted tokens per row when speculating.
     weight_bytes: int
     weight_bytes_per_token: float
+
+
+def _tree_walk_greedy(g, tokens, parents, n_draft, depth):
+    """Device-side greedy tree acceptance: from the root (in-row index 0),
+    follow the child whose token equals the target argmax at the current
+    node, as deep as the matches go.
+
+    g ``[B, R]`` — the target argmax after each in-row position; tokens /
+    parents ``[B, C]`` (parent = in-row index, ``-1`` = none); n_draft
+    ``[B]`` node counts (nodes sit at in-row indices ``1 … n_draft``).
+    Returns ``(fix [B], n_acc [B], path [B, depth])`` — the corrected /
+    bonus token (argmax at the deepest accepted node), the accepted
+    depth, and the accepted branch's in-row indices (0-padded). Emitting
+    ``path`` tokens then ``fix`` reproduces sequential greedy decode
+    token-for-token — the tree-speculation identity guarantee.
+    """
+    b, c = tokens.shape
+    idx = jnp.arange(c, dtype=jnp.int32)[None, :]
+    rmax = g.shape[1] - 1
+
+    def body(t, carry):
+        cur, n_acc, path, alive = carry
+        g_cur = jnp.take_along_axis(g, jnp.clip(cur, 0, rmax)[:, None],
+                                    axis=1)[:, 0]
+        cand = ((parents == cur[:, None]) & (tokens == g_cur[:, None])
+                & (idx >= 1) & (idx <= n_draft[:, None]) & alive[:, None])
+        has = cand.any(axis=1)
+        child = jnp.argmax(cand, axis=1).astype(jnp.int32)
+        cur = jnp.where(has, child, cur)
+        n_acc = n_acc + has.astype(jnp.int32)
+        path = path.at[:, t].set(jnp.where(has, child, 0))
+        return cur, n_acc, path, alive & has
+
+    carry = (jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32),
+             jnp.zeros((b, depth), jnp.int32), jnp.ones(b, bool))
+    cur, n_acc, path, _ = jax.lax.fori_loop(0, depth, body, carry)
+    fix = jnp.take_along_axis(g, jnp.clip(cur, 0, rmax)[:, None],
+                              axis=1)[:, 0]
+    return fix, n_acc, path
+
+
+def _tree_walk_sampled(probs, tokens, parents, n_draft, depth, key):
+    """Multi-branch acceptance sampling over a token tree (SpecInfer-style
+    point-mass residuals), distribution-faithful per row.
+
+    At each accepted node the children are tried in in-row order: child
+    token x is accepted with probability ``p(x) / mass`` where ``p`` is
+    the target distribution at the node and ``mass`` the residual left by
+    previously rejected siblings (whose point mass is zeroed — standard
+    residual acceptance, so the emitted marginal equals sequential
+    sampling). When every child is rejected the fix token is drawn from
+    the residual; at a leaf (or full depth) from the plain target — the
+    bonus draw. ``probs [B, R, V]`` must already be temperature / top-k
+    filtered; one-hot rows reduce exactly to `_tree_walk_greedy`.
+    """
+    b, c = tokens.shape
+    v = probs.shape[-1]
+    rmax = probs.shape[1] - 1
+    ku, kf = jax.random.split(key)
+    us = jax.random.uniform(ku, (depth, c, b))
+    bidx = jnp.arange(b)
+
+    def take_p(cur):
+        return jnp.take_along_axis(
+            probs, jnp.clip(cur, 0, rmax)[:, None, None], axis=1)[:, 0]
+
+    def outer(t, carry):
+        cur, n_acc, path, alive, p_bonus = carry
+        u_t = jax.lax.dynamic_index_in_dim(us, t, 0, keepdims=False)
+
+        def inner(j, ic):
+            accepted, child, p_res = ic
+            par_j = jax.lax.dynamic_index_in_dim(parents, j, 1,
+                                                 keepdims=False)
+            tok_j = jax.lax.dynamic_index_in_dim(tokens, j, 1,
+                                                 keepdims=False)
+            u_j = jax.lax.dynamic_index_in_dim(u_t, j, 0, keepdims=False)
+            is_cand = (alive & ~accepted & (par_j == cur)
+                       & (j <= n_draft))
+            p_tok = p_res[bidx, tok_j]
+            mass = p_res.sum(axis=1)
+            acc = is_cand & (u_j * mass < p_tok)       # P = p_tok / mass
+            rej = is_cand & ~acc
+            p_res = p_res.at[bidx, tok_j].set(
+                jnp.where(rej, 0.0, p_tok))
+            return accepted | acc, jnp.where(acc, j, child), p_res
+
+        accepted, child, p_res = jax.lax.fori_loop(
+            1, c, inner,
+            (jnp.zeros(b, bool), jnp.zeros(b, jnp.int32), take_p(cur)))
+        stepped = alive & accepted
+        p_bonus = jnp.where((alive & ~accepted)[:, None], p_res, p_bonus)
+        cur = jnp.where(stepped, child, cur)
+        n_acc = n_acc + stepped.astype(jnp.int32)
+        path = path.at[:, t].set(jnp.where(stepped, child, 0))
+        return cur, n_acc, path, stepped, p_bonus
+
+    carry = (jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32),
+             jnp.zeros((b, depth), jnp.int32), jnp.ones(b, bool),
+             jnp.zeros((b, v), probs.dtype))
+    cur, n_acc, path, alive, p_bonus = jax.lax.fori_loop(0, depth, outer,
+                                                         carry)
+    p_bonus = jnp.where(alive[:, None], take_p(cur), p_bonus)
+    safe = jnp.where(p_bonus.sum(axis=1, keepdims=True) > 0, p_bonus, 1.0)
+    fix = jax.random.categorical(kf, jnp.log(safe)).astype(jnp.int32)
+    return fix, n_acc, path
 
 
 def sample(logits: jax.Array, cfg: SamplerConfig, key) -> jax.Array:
@@ -175,6 +282,8 @@ class GenerationEngine:
                  spec_k: int = 4,
                  spec_ngram_max: int = 3,
                  spec_adaptive: bool = False,
+                 spec_tree: bool = False,
+                 spec_tree_fanout: int = 2,
                  draft_model=None, draft_params=None,
                  draft_fn=None,
                  mesh=None,
@@ -249,9 +358,21 @@ class GenerationEngine:
                     "draft_model keeps bounded per-slot sequential state "
                     "(ring/SSM/MLA) — the draft cache must be pure dense "
                     "full attention")
+        # tree speculation: drafts branch (a primary chain + alternate
+        # first tokens), one chunk dispatch verifies every branch under
+        # the kernel's ancestor mask, and the device-side walk + KV
+        # compaction keep greedy streams token-identical to sequential
+        # decode (see scheduler / _tree_greedy_fn)
+        if spec_tree and spec_decode is None:
+            raise ValueError("spec_tree needs a drafter — set "
+                             "spec_decode='ngram' or 'draft_model'")
+        if spec_tree and spec_tree_fanout < 1:
+            raise ValueError("spec_tree_fanout must be ≥ 1")
         self.spec_decode = spec_decode
         self.spec_k = spec_k
         self.spec_adaptive = spec_adaptive
+        self.spec_tree = spec_tree
+        self.spec_tree_fanout = spec_tree_fanout
         self.spec_ngram_max = spec_ngram_max
         self.draft_model = draft_model
         self.draft_params = draft_params
@@ -363,17 +484,25 @@ class GenerationEngine:
                                                        n_host=6, n_out=3)
                 self._spec_sampled = self._jit_dispatch(
                     self._spec_sampled_fn, n_host=9, n_out=3)
+                if self.spec_tree:
+                    self._tree_greedy = self._jit_dispatch(
+                        self._tree_greedy_fn, n_host=9, n_out=4)
+                    self._tree_sampled = self._jit_dispatch(
+                        self._tree_sampled_fn, n_host=12, n_out=4)
                 sched_spec = "ngram" if self.spec_decode == "ngram" \
                     else "draft_fn"
                 if self.spec_decode == "draft_model":
                     draft_fn = self._custom_draft_fn
                     if draft_fn is None:
                         self._draft_init()
-                        draft_fn = self._draft_fn
+                        draft_fn = self._draft_tree_fn if self.spec_tree \
+                            else self._draft_fn
             return Scheduler(pager, run_batch=self._exec_run_batch,
                              chunk_size=self.prefill_chunk,
                              spec_decode=sched_spec, spec_k=self.spec_k,
                              adaptive_spec_k=self.spec_adaptive,
+                             spec_tree=self.spec_tree,
+                             spec_tree_fanout=self.spec_tree_fanout,
                              draft_fn=draft_fn,
                              ngram_max=self.spec_ngram_max,
                              preemption=self.preemption,
@@ -690,6 +819,97 @@ class GenerationEngine:
         fix = jnp.where(n_acc == n_draft, fix_bon, fix_rej)
         return fix, n_acc, cache
 
+    # --- tree-speculative verify steps ------------------------------------
+    # A tree verify row carries a whole token TREE at contiguous KV slots
+    # (node i at slot q + 1 + i, in node-index order): `chunk_step` runs
+    # ONE weight pass with the per-row ancestor mask routing each node's
+    # attention to exactly its own root-path, and with ``rpos`` giving
+    # nodes their LOGICAL position q + depth(i) (siblings share a depth,
+    # so their RoPE angles match what sequential decode would use). The
+    # device-side walk picks the deepest accepted branch, and the KV of
+    # that branch is compacted into the contiguous slots sequential
+    # decode would have written — after the host truncates the losing
+    # branches, the paged cache is bit-identical to a sequential run,
+    # which is what makes greedy tree speculation token-identical
+    # end-to-end (across int8 pools, prefix sharing, and the mesh).
+
+    def _tree_compact(self, cache, pt, q, path, n_acc):
+        """Gather-then-scatter the accepted branch's strips into place.
+
+        For accepted depth ``t`` (1-based), the node at in-row index
+        ``path[:, t-1]`` moves from KV slot ``q + path[:, t-1]`` to slot
+        ``q + t`` in every pool leaf (int8 codes and scale strips
+        included). All gathers complete before any scatter (functional
+        updates), so chained moves within a row cannot clobber each
+        other; no-op moves (node already in place), depths beyond
+        ``n_acc`` and padding rows (``q < 0``) are redirected to the
+        scratch page 0, whose content is never read.
+        """
+        ps = self.page_size
+        dmax = path.shape[1]
+        t = jnp.arange(1, dmax + 1, dtype=jnp.int32)[None, :]
+        src = q[:, None] + path
+        dst = q[:, None] + t
+        live = (t <= n_acc[:, None]) & (path != t) & (q[:, None] >= 0)
+        src_i = jnp.where(live, src, 0)
+        dst_i = jnp.where(live, dst, 0)
+        src_pg = jnp.take_along_axis(pt, src_i // ps, axis=1)
+        dst_pg = jnp.take_along_axis(pt, dst_i // ps, axis=1)
+        sp = jnp.where(live, src_pg, 0).reshape(-1)
+        so = jnp.where(live, src_i % ps, 0).reshape(-1)
+        dp = jnp.where(live, dst_pg, 0).reshape(-1)
+        do = jnp.where(live, dst_i % ps, 0).reshape(-1)
+        return {seg: {"kv_pool": {
+                    k: leaf.at[:, dp, do].set(leaf[:, sp, so])
+                    for k, leaf in entry["kv_pool"].items()}}
+                for seg, entry in cache.items()}
+
+    def _tree_greedy_fn(self, params, cache, page_tables, tokens, pos,
+                        row_slots, sample_idx, n_draft, rpos, amask,
+                        parents):
+        """Greedy tree verify: one weight pass over every branch, then the
+        argmax walk — emits exactly the tokens sequential greedy decode
+        would (rows with ``n_draft == 0`` degenerate to plain decode)."""
+        r = self.spec_k + 1
+        pt = page_tables[row_slots]
+        logits, cache = self.model.chunk_step(
+            params, cache, tokens, pos, sample_idx, page_table=pt,
+            num_logits=r, rpos=rpos, amask=amask)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        fix, n_acc, path = _tree_walk_greedy(g, tokens, parents, n_draft,
+                                             self.spec_k)
+        cache = self._tree_compact(cache, pt, pos[:, 0], path, n_acc)
+        return fix, n_acc, path, cache
+
+    def _tree_sampled_fn(self, params, cache, page_tables, tokens, pos,
+                         row_slots, sample_idx, n_draft, rpos, amask,
+                         parents, temps, topks, key):
+        """Sampled tree verify: residual acceptance over sibling branches
+        (see `_tree_walk_sampled`); greedy rows ride a one-hot target, so
+        mixed-sampler steps keep their greedy rows argmax-exact."""
+        r = self.spec_k + 1
+        pt = page_tables[row_slots]
+        logits, cache = self.model.chunk_step(
+            params, cache, tokens, pos, sample_idx, page_table=pt,
+            num_logits=r, rpos=rpos, amask=amask)
+        v = logits.shape[-1]
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None, None]
+        kidx = jnp.broadcast_to(
+            jnp.clip(topks - 1, 0, v - 1)[:, None, None],
+            (logits.shape[0], r, 1))
+        desc = -jnp.sort(-scaled, axis=-1)
+        kth = jnp.take_along_axis(desc, kidx, axis=-1)
+        filtered = jnp.where(scaled < kth, -1e30, scaled)
+        scaled = jnp.where((topks > 0)[:, None, None], filtered, scaled)
+        probs = jax.nn.softmax(scaled, axis=-1)
+        probs = jnp.where((temps == 0.0)[:, None, None],
+                          jax.nn.one_hot(g, v, dtype=probs.dtype), probs)
+        fix, n_acc, path = _tree_walk_sampled(probs, tokens, parents,
+                                              n_draft, self.spec_k, key)
+        cache = self._tree_compact(cache, pt, pos[:, 0], path, n_acc)
+        return fix, n_acc, path, cache
+
     # --- draft-model drafting (spec_decode="draft_model") -----------------
     # The draft model keeps a DENSE per-slot cache [num_slots, max_seq]
     # (it is small by construction — paging it would buy nothing): lazy
@@ -709,6 +929,9 @@ class GenerationEngine:
                                              donate_argnums=(1,))
         self._draft_step = self._exec_jit(self._draft_step_fn,
                                           donate_argnums=(1,))
+        self._draft_top = self._exec_jit(self._draft_top_fn,
+                                         donate_argnums=(1,),
+                                         static_argnums=(4,))
 
     def _draft_prefill_fn(self, params, dcache, tokens, slot):
         """tokens [1, S] → draft cache with slot's rows 0..S-1 rewritten.
@@ -740,6 +963,13 @@ class GenerationEngine:
         logits, dcache = self.draft_model.decode_step(params, dcache,
                                                       token, pos)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), dcache
+
+    def _draft_top_fn(self, params, dcache, token, pos, f):
+        """Top-``f`` next tokens per row (column 0 = the argmax) — the
+        branching first step of tree drafting."""
+        logits, dcache = self.draft_model.decode_step(params, dcache,
+                                                      token, pos)
+        return jax.lax.top_k(logits, f)[1].astype(jnp.int32), dcache
 
     def _draft_fn(self, reqs):
         """Scheduler drafting hook: [(slot, rid, ctx, next_pos, k_eff)] →
@@ -776,6 +1006,68 @@ class GenerationEngine:
                 # draft's KV (rows of inactive slots idle at position 0,
                 # which the next per-slot prefill rewrites)
         return props
+
+    def _draft_tree_fn(self, reqs):
+        """Tree drafting hook (``spec_tree``): the draft model's top-
+        ``fanout`` first-step tokens branch the root — the top-1 opens
+        the primary chain (continued greedily), the rest become depth-1
+        alternates hedging a chain miss. Alternates consume node budget:
+        the chain keeps ``k_eff − #alternates`` nodes, so the row width
+        never exceeds the linear verify bucket. Same lazy per-slot
+        dense-cache prefill and idempotent-rewrite argument as
+        `_draft_fn`; requests carry a trailing ``fanout`` element."""
+        b = self.num_slots
+        for slot, rid, ctx, q, _k, _f in reqs:
+            if self._draft_rid.get(slot) != rid:   # slot reused: re-prefill
+                padded = np.zeros(self._draft_bucket(q), np.int32)
+                padded[:q] = ctx[:q]
+                self._draft_cache = self._draft_prefill(
+                    self.draft_params, self._draft_cache,
+                    jnp.asarray(padded)[None, :], jnp.int32(slot))
+                self._draft_rid[slot] = rid
+        tok = np.zeros(b, np.int32)
+        posv = np.zeros(b, np.int32)
+        chain: dict[int, int] = {}        # slot → chain length left
+        fans: dict[int, int] = {}
+        for slot, _rid, ctx, q, k, f in reqs:
+            tok[slot] = int(ctx[-1])
+            posv[slot] = q
+            chain[slot] = k
+            fans[slot] = f
+        fmax = max(max(fans.values()), 1)
+        nodes: dict[int, list[tuple[int, int]]] = {s: [] for s in chain}
+        last: dict[int, int] = {}         # slot → chain tip node index
+        alts: dict[int, list[int]] = {}
+        for i in range(max(chain.values()) + 1):
+            if i == 0:
+                top, self._draft_cache = self._draft_top(
+                    self.draft_params, self._draft_cache,
+                    jnp.asarray(tok), jnp.asarray(posv), fmax)
+                top = np.asarray(top)
+                nxt = top[:, 0]
+            else:
+                nxt, self._draft_cache = self._draft_step(
+                    self.draft_params, self._draft_cache,
+                    jnp.asarray(tok), jnp.asarray(posv))
+                nxt = np.asarray(nxt)
+            for slot, k in chain.items():
+                if i == 0:
+                    a = [int(t) for t in top[slot, 1:fans[slot]]][:k - 1]
+                    alts[slot] = a
+                    chain[slot] = k - len(a)   # chain keeps the rest
+                    nodes[slot].append((int(nxt[slot]), -1))
+                    last[slot] = 0
+                    tok[slot] = int(nxt[slot])
+                    posv[slot] += 1
+                elif i < chain[slot]:
+                    nodes[slot].append((int(nxt[slot]), last[slot]))
+                    last[slot] = len(nodes[slot]) - 1
+                    tok[slot] = int(nxt[slot])
+                    posv[slot] += 1
+                # i ≥ chain length: frozen, same dead-KV argument as above
+        for slot, a in alts.items():
+            nodes[slot].extend((t, -1) for t in a)
+        return nodes
 
     def _decode_paged_fn(self, params, cache, page_tables, token, pos,
                          temps, topks, key):
@@ -830,8 +1122,26 @@ class GenerationEngine:
         return min(b, pps)
 
     def _exec_run_batch(self, tokens, pos, row_slots, sample_idx, temps,
-                        topks, n_draft=None):
+                        topks, n_draft=None, tree=None):
         tables = self._device_tables(self._context_bucket(int(pos.max())))
+        if tree is not None:
+            # tree verify: per-row ancestor masks + logical positions in,
+            # (corrected token, accepted depth, accepted branch) out —
+            # the accepted KV is already compacted on device
+            targs = (jnp.asarray(tokens), jnp.asarray(pos),
+                     jnp.asarray(row_slots), jnp.asarray(sample_idx),
+                     jnp.asarray(n_draft), jnp.asarray(tree["rpos"]),
+                     jnp.asarray(tree["amask"]),
+                     jnp.asarray(tree["parents"]))
+            if not temps.any() and not topks.any():
+                fix, n_acc, path, self._paged_cache = self._tree_greedy(
+                    self._params_run, self._paged_cache, tables, *targs)
+            else:
+                self._key, sub = jax.random.split(self._key)
+                fix, n_acc, path, self._paged_cache = self._tree_sampled(
+                    self._params_run, self._paged_cache, tables, *targs,
+                    jnp.asarray(temps), jnp.asarray(topks), sub)
+            return np.asarray(fix), np.asarray(n_acc), np.asarray(path)
         if n_draft is not None and n_draft.any():
             # at least one verify run: the speculative step returns, per
             # row, the leading-accept count + corrected/bonus token
@@ -915,6 +1225,23 @@ class GenerationEngine:
                         jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
                         sub)
                     n += 1
+                if not self.spec_tree:
+                    continue
+                # tree-verify variants: all-padding rows with an all-false
+                # ancestor mask (nothing visible in-span → exact-zero rows)
+                targs = args + (nd, jnp.full((b, c), -1, jnp.int32),
+                                jnp.zeros((b, c, c), jnp.bool_),
+                                jnp.full((b, c), -1, jnp.int32))
+                _, _, _, self._paged_cache = self._tree_greedy(
+                    self._params_run, self._paged_cache, tables, *targs)
+                n += 1
+                if sampled:
+                    self._key, sub = jax.random.split(self._key)
+                    _, _, _, self._paged_cache = self._tree_sampled(
+                        self._params_run, self._paged_cache, tables, *targs,
+                        jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.int32),
+                        sub)
+                    n += 1
         return n
 
     def _exec_prefill_commit(self, req: Request, slot: int,
@@ -947,8 +1274,8 @@ class GenerationEngine:
                sampler: SamplerConfig | None = None,
                eos_id: int | None = None,
                prefix_id: str | None = None,
-               priority: int = 0) -> int:
-        """Queue one request; returns its request id.
+               priority: int = 0, n: int = 1) -> int | list[int]:
+        """Queue one request; returns its request id (or ``n`` ids).
 
         ``prefix_id`` opts the request into prefix sharing: requests
         carrying the same id alias any already-resident full KV pages
@@ -963,19 +1290,37 @@ class GenerationEngine:
         restores later with zero recompute. Priorities reorder
         **scheduling**, never tokens — every stream stays identical to
         its uninterrupted run.
+
+        ``n > 1`` requests parallel sampling: ``n`` continuations of the
+        same prompt, returned as a list of request ids. The siblings
+        share one prefix namespace (an auto-generated one when
+        ``prefix_id`` is None), so the prompt's full KV pages are
+        physically written once and aliased read-only by the other
+        ``n - 1`` slots via the pager's refcounts; each slot
+        copy-on-writes only its partial tail page when its own decode
+        diverges. Greedy siblings emit identical streams; sampled
+        siblings draw independently (one fresh key per dispatch).
         """
         if self._scheduler is None:
             self._scheduler = self._serving_init()
+        if n < 1:
+            raise ValueError(f"n must be >= 1, got {n}")
         s = sampler or self.sampler
-        rid = self._next_rid
-        self._next_rid += 1
-        self._scheduler.submit(Request(
-            rid=rid, tokens=np.asarray(tokens, np.int32).reshape(-1),
-            max_new_tokens=max_new_tokens, temperature=s.temperature,
-            top_k=s.top_k,
-            eos_id=self.eos_id if eos_id is None else eos_id,
-            prefix_id=prefix_id, priority=priority))
-        return rid
+        pid = prefix_id
+        if n > 1 and pid is None:
+            pid = f"__par{self._next_rid}"
+        rids = []
+        for _ in range(n):
+            rid = self._next_rid
+            self._next_rid += 1
+            self._scheduler.submit(Request(
+                rid=rid, tokens=np.asarray(tokens, np.int32).reshape(-1),
+                max_new_tokens=max_new_tokens, temperature=s.temperature,
+                top_k=s.top_k,
+                eos_id=self.eos_id if eos_id is None else eos_id,
+                prefix_id=pid, priority=priority))
+            rids.append(rid)
+        return rids if n > 1 else rids[0]
 
     def preempt(self, rid: int) -> bool:
         """Spill ``rid``'s slot to the host tier now (ops/test hook —
@@ -1083,6 +1428,7 @@ class GenerationEngine:
             accepted_tokens=st.accepted_tokens,
             rollbacks=st.rollbacks,
             spec_k_now=self._scheduler.spec_k_cur,
+            spec_fanout_now=getattr(self._scheduler, "fanout_cur", 1),
             preemptions=st.preemptions,
             pressure_spills=st.pressure_spills,
             restores=st.restores,

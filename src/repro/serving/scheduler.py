@@ -114,6 +114,59 @@ def ngram_propose(ctx: np.ndarray, k: int, max_n: int = 3,
     return []
 
 
+def ngram_propose_tree(ctx: np.ndarray, budget: int, fanout: int,
+                       max_n: int = 3, min_n: int = 1,
+                       window: int = 512) -> list[tuple[int, int]]:
+    """Prompt-lookup drafting, tree-shaped: ``[(token, parent), …]``.
+
+    Like `ngram_propose`, but instead of a single chain the proposal is a
+    token TREE of at most ``budget`` nodes: a primary chain continued
+    from the suffix's most recent earlier occurrence, plus up to
+    ``fanout - 1`` depth-1 **alternate** first tokens taken from older
+    occurrence sites whose continuations start differently. Each node is
+    ``(token, parent)`` with ``parent`` the node index of its parent
+    (``-1`` = the root, i.e. the slot's last sampled token); parents
+    always precede children (topological order), which the device-side
+    acceptance walk and the KV-slot layout both rely on. Alternates hedge
+    the chain: when the target rejects the primary first token, a
+    matching alternate still salvages one accepted token from the same
+    weight pass. Returns ``[]`` when nothing matches.
+    """
+    ctx = np.asarray(ctx)
+    if window and len(ctx) > window:
+        ctx = ctx[-window:]
+    ln = len(ctx)
+    for n in range(min(max_n, ln - 1), min_n - 1, -1):
+        tail = ctx[ln - n:]
+        win = np.lib.stride_tricks.sliding_window_view(ctx[:-1], n)
+        hits = np.nonzero((win == tail).all(axis=1))[0]
+        if not len(hits):
+            continue
+        start = int(hits[-1]) + n              # most recent occurrence
+        first = int(ctx[start])
+        # depth-1 alternates: older sites with DISTINCT first tokens
+        alts: list[int] = []
+        seen = {first}
+        for h in hits[-2::-1]:
+            if len(alts) >= fanout - 1:
+                break
+            t2 = int(ctx[int(h) + n])
+            if t2 not in seen:
+                seen.add(t2)
+                alts.append(t2)
+        chain_len = max(1, budget - len(alts))
+        alts = alts[:budget - chain_len]
+        chain = [int(t) for t in ctx[start:start + chain_len]]
+        if not chain:
+            continue
+        nodes = [(chain[0], -1)]
+        for i, t in enumerate(chain[1:]):
+            nodes.append((t, i))               # chain: parent = predecessor
+        nodes.extend((t, -1) for t in alts)    # alternates branch the root
+        return nodes
+    return []
+
+
 def spec_k_buckets(spec_k_max: int) -> list[int]:
     """Draft-length buckets adaptive speculation moves through: powers of
     two up to ``spec_k_max``, plus ``spec_k_max`` itself. Bounded at
@@ -265,6 +318,13 @@ class Scheduler:
         rejection) or bonus (on full acceptance) token sampled at index
         ``n_acc``. Rows with ``n_draft == 0`` degenerate to the plain
         contract (``n_acc = 0``, ``fix_tok`` = the sampled token).
+        Under ``spec_tree`` steps carrying at least one tree row add a
+        keyword ``tree={"rpos", "amask", "parents"}`` (logical
+        positions, per-row ancestor-closure visibility blocks, in-row
+        parent indices) and must return ``(fix_tok, n_acc, path)`` with
+        ``path [B, spec_k]`` the accepted branch's in-row node indices —
+        the executor walks the tree ON DEVICE and compacts the winning
+        branch's KV into contiguous slots before returning.
       * prefill_commit(request, slot, pages, n_shared) → first token;
         decode(page_tables, token, pos, temps, topks) → next tokens.
 
@@ -284,6 +344,8 @@ class Scheduler:
                  spec_decode: str | None = None,
                  spec_k: int = 4,
                  adaptive_spec_k: bool = False,
+                 spec_tree: bool = False,
+                 spec_tree_fanout: int = 2,
                  draft_fn: Callable | None = None,
                  ngram_max: int = 3,
                  preemption: bool = False,
@@ -308,6 +370,12 @@ class Scheduler:
                 raise ValueError("spec_k must be ≥ 1")
             if spec_decode == "draft_fn" and draft_fn is None:
                 raise ValueError("spec_decode='draft_fn' needs a draft_fn")
+        if spec_tree:
+            if spec_decode is None:
+                raise ValueError("spec_tree needs a drafter "
+                                 "(spec_decode='ngram' or 'draft_fn')")
+            if spec_tree_fanout < 1:
+                raise ValueError("spec_tree_fanout must be ≥ 1")
         self._run_batch = run_batch
         self._prefill_commit = prefill_commit
         self._decode = decode
@@ -327,6 +395,16 @@ class Scheduler:
         self.spec_k_cur = spec_k
         self._k_buckets = spec_k_buckets(spec_k)
         self._accept_ema: float | None = None
+        # tree speculation: drafts become (token, parent) node lists, the
+        # verify row carries the whole tree at contiguous KV slots, and
+        # the executor's device-side walk returns the deepest accepted
+        # path. Adaptive shape: ``fanout_cur`` GROWS when acceptance is
+        # low (alternates hedge a missing primary chain) and shrinks back
+        # toward 1 when the chain keeps hitting (depth then earns more of
+        # the node budget via ``spec_k_cur``).
+        self.spec_tree = spec_tree
+        self.spec_tree_fanout = spec_tree_fanout
+        self.fanout_cur = min(spec_tree_fanout, 2) if spec_tree else 1
         self.width_buckets = width_family(
             chunk_size, spec_k if spec_decode is not None else 0)
         if preemption and not self.chunked:
@@ -594,7 +672,7 @@ class Scheduler:
         return False
 
     # ---------------------------------------------------- speculative drafts
-    def _propose_drafts(self) -> dict[int, list[int]]:
+    def _propose_drafts(self) -> dict:
         """Per decoding slot, up to ``spec_k`` draft tokens for this step.
 
         Draft length is capped at the slot's remaining budget minus one
@@ -603,9 +681,17 @@ class Scheduler:
         `alloc_slot` already holds, which is what keeps `extend` for
         verify runs infallible. Empty proposals fall back to plain
         decode rows.
+
+        Under ``spec_tree`` proposals are ``[(token, parent), …]`` node
+        lists (parent = node index, ``-1`` = root) with the same total
+        node cap — a tree occupies one KV slot per node, so the budget
+        argument is identical. A ``draft_fn`` drafter receives an extra
+        trailing ``fanout`` element per request and must return node
+        lists in topological order (parents before children).
         """
-        out: dict[int, list[int]] = {}
-        reqs: list[tuple[int, int, np.ndarray, int, int]] = []
+        tree = self.spec_tree
+        out: dict = {}
+        reqs: list[tuple] = []
         caps: dict[int, int] = {}
         for slot, st in self.slots.items():
             if st.prefilling:
@@ -618,15 +704,28 @@ class Scheduler:
             ctx = np.concatenate([r.tokens,
                                   np.asarray(st.generated, np.int32)])
             if self.spec_decode == "ngram":
-                prop = ngram_propose(ctx, k_eff, self.ngram_max)
+                prop = (ngram_propose_tree(ctx, k_eff, self.fanout_cur,
+                                           self.ngram_max) if tree
+                        else ngram_propose(ctx, k_eff, self.ngram_max))
                 if prop:
                     out[slot] = prop
             else:
-                reqs.append((slot, r.rid, ctx, st.next_pos, k_eff))
+                reqs.append((slot, r.rid, ctx, st.next_pos, k_eff,
+                             self.fanout_cur) if tree
+                            else (slot, r.rid, ctx, st.next_pos, k_eff))
                 caps[slot] = k_eff
         if reqs:
             for slot, prop in (self._draft_fn(reqs) or {}).items():
-                prop = [int(t) for t in prop][: caps.get(slot, 0)]
+                cap = caps.get(slot, 0)
+                if tree:
+                    prop = [(int(t), int(par)) for t, par in prop][:cap]
+                    if any(par >= i for i, (_, par) in enumerate(prop)):
+                        raise ValueError(
+                            f"draft_fn returned a non-topological tree "
+                            f"for slot {slot}: every parent index must "
+                            f"precede its child")
+                else:
+                    prop = [int(t) for t in prop][:cap]
                 if prop:
                     out[slot] = prop
         return out
@@ -683,7 +782,8 @@ class Scheduler:
         sample_row: dict[int, int] = {}       # slot → row holding its sample
         chunk_tok: dict[int, int] = {}        # slot → prompt tokens this step
         run_q: dict[int, int] = {}            # slot → base pos of its run
-        row_draft: dict[int, list[int]] = {}  # slot → drafts in its run
+        row_draft: dict[int, list] = {}       # slot → drafts in its run
+        tree_rows: dict[int, tuple] = {}      # row → packed tree metadata
         row = 0
         for slot, st in self.slots.items():   # decode/verify rows first
             if st.prefilling:
@@ -693,7 +793,26 @@ class Scheduler:
             n = 1 + len(d)
             q = st.next_pos
             tokens[row, 0] = st.generated[-1]
-            if d:
+            if d and self.spec_tree:
+                # tree verify row: node i sits at KV slot q + 1 + i (the
+                # pager's extend/truncate stay contiguous), its LOGICAL
+                # position is q + depth(i) (siblings share a depth, not a
+                # slot), and the ancestor closure becomes the row's
+                # intra-chunk visibility block
+                tokens[row, 1:n] = [t for t, _ in d]
+                dep = np.zeros(n, np.int32)
+                anc = np.zeros((n, n), bool)
+                anc[0, 0] = True
+                par_inrow = np.full(n, -1, np.int32)
+                for i, (_t, par) in enumerate(d):
+                    j = 1 + i
+                    pj = 1 + par if par >= 0 else 0
+                    par_inrow[j] = pj
+                    dep[j] = dep[pj] + 1
+                    anc[j] = anc[pj]
+                    anc[j, j] = True
+                tree_rows[row] = (n, q, dep, anc, par_inrow)
+            elif d:
                 tokens[row, 1:n] = d
             pos[row, :n] = np.arange(q, q + n)
             row_slots[row] = slot
@@ -733,10 +852,29 @@ class Scheduler:
         self.stats.dispatched_positions += b * c
         self.stats.padded_positions += b * c - valid
         self.stats.padded_positions_fixed += b * c_fixed - valid
+        path_arr = None
         if self.spec_decode is None:
             sampled = self._run_batch(tokens, pos, row_slots, sample_idx,
                                       temps, topks)
             fix_tok, n_acc = sampled, np.zeros(b, np.int32)
+        elif tree_rows:
+            # tree verify: rpos carries logical (depth) positions, amask
+            # the per-row ancestor closure (plain causality elsewhere),
+            # parents the in-row walk topology. The executor returns the
+            # deepest accepted path as in-row node indices.
+            rpos = pos.copy()
+            amask = np.broadcast_to(np.tril(np.ones((c, c), bool)),
+                                    (b, c, c)).copy()
+            parents = np.full((b, c), -1, np.int32)
+            for trow, (n, q, dep, anc, par_inrow) in tree_rows.items():
+                rpos[trow, :n] = q + dep
+                amask[trow] = False
+                amask[trow, :n, :n] = anc
+                parents[trow, :n] = par_inrow
+            fix_tok, n_acc, path_arr = self._run_batch(
+                tokens, pos, row_slots, sample_idx, temps, topks,
+                n_draft=n_draft,
+                tree={"rpos": rpos, "amask": amask, "parents": parents})
         else:
             fix_tok, n_acc = self._run_batch(tokens, pos, row_slots,
                                              sample_idx, temps, topks,
@@ -766,10 +904,16 @@ class Scheduler:
                 continue
             # decode / verify row: emit the accepted draft prefix plus the
             # corrected (rejection) or bonus (full-acceptance) token,
-            # stopping at EOS / budget mid-run
+            # stopping at EOS / budget mid-run. Tree rows read the
+            # accepted tokens off the returned path (in-row node indices,
+            # deepest accepted branch); linear rows off the draft prefix.
             d = row_draft.get(slot, [])
             na = min(int(n_acc[row]), len(d))
-            for tok in d[:na] + [int(fix_tok[row])]:
+            if self.spec_tree and d:
+                emit = [d[int(path_arr[row, t]) - 1][0] for t in range(na)]
+            else:
+                emit = d[:na]
+            for tok in emit + [int(fix_tok[row])]:
                 st.generated.append(tok)
                 events.append((st.request.rid, tok))
                 self.stats.slot_tokens += 1
@@ -810,6 +954,15 @@ class Scheduler:
         elif self._accept_ema > self._GROW_ABOVE \
                 and i + 1 < len(self._k_buckets):
             self.spec_k_cur = self._k_buckets[i + 1]
+        if self.spec_tree:
+            # tree shape rides the same EMA in the opposite direction:
+            # a missing drafter earns more hedging (wider root fanout), a
+            # hitting one hands the node budget back to chain depth
+            if self._accept_ema < self._SHRINK_BELOW:
+                self.fanout_cur = min(self.fanout_cur + 1,
+                                      self.spec_tree_fanout)
+            elif self._accept_ema > self._GROW_ABOVE:
+                self.fanout_cur = max(self.fanout_cur - 1, 1)
 
     # ------------------------------------------------- one-shot decode step
     def _decode_once(self, events: list[tuple[int, int]]) -> None:

@@ -230,6 +230,122 @@ def test_chunk_kernel_causal_within_chunk():
 
 
 # ---------------------------------------------------------------------------
+# Ancestor-mask edge cases (tree-speculation mask semantics)
+# ---------------------------------------------------------------------------
+
+def _rand_pool(rng, npages, page, hkv, hd):
+    kf = jnp.asarray(rng.normal(size=(npages, page, hkv, hd)) * 2,
+                     jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(npages, page, hkv, hd)), jnp.float32)
+    k, ks = _kv_quantize(kf)
+    v, vs = _kv_quantize(vf)
+    return k, ks, v, vs
+
+
+def test_chunk_kernel_all_masked_row_exact_zero():
+    """A valid (non-padding) query whose ancestor-mask row is empty and
+    that sits at watermark 0 (no committed span) sees nothing — the
+    kernel's l == 0 flush must produce exactly 0, not NaN or softmax
+    garbage, and other rows in the batch are unaffected."""
+    rng = np.random.default_rng(20)
+    npages, page, hkv, g, hd, nblk = 6, 8, 2, 2, 64, 2
+    k, ks, v, vs = _rand_pool(rng, npages, page, hkv, hd)
+    c = 4
+    q = jnp.asarray(rng.normal(size=(2, c, hkv, g, hd)), jnp.float32)
+    table = jnp.asarray([[2, 3], [4, 5]], jnp.int32)
+    # row 0: fresh slot at watermark 0, all-false amask → nothing visible
+    # row 1: ordinary causal chunk at watermark 4 → unaffected control
+    pos = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    amask = np.zeros((2, c, c), bool)
+    amask[1] = np.tril(np.ones((c, c), bool))
+    out = paged_attention_chunk(q, k, ks, v, vs, table, pos,
+                                amask=jnp.asarray(amask), interpret=True)
+    ref = paged_attention_chunk_ref(q, k, ks, v, vs, table, pos,
+                                    amask=jnp.asarray(amask))
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(ref[0]).max()) == 0.0
+    assert np.isfinite(np.asarray(out)).all()
+    plain = paged_attention_chunk(q[1:], k, ks, v, vs, table[1:], pos[1:],
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(plain[0]),
+                               atol=1e-6)
+
+
+def test_chunk_kernel_tree_mask_straddles_page_boundary():
+    """A speculation tree whose in-span slots straddle a page boundary:
+    the ancestor mask must keep following node indices while the keys
+    come from two different physical pages. Kernel ≡ oracle, and each
+    node attends exactly to its ancestor chain."""
+    rng = np.random.default_rng(21)
+    npages, page, hkv, g, hd, nblk = 8, 8, 2, 2, 64, 2
+    k, ks, v, vs = _rand_pool(rng, npages, page, hkv, hd)
+    c = 5                                   # root + 4 tree nodes
+    q = jnp.asarray(rng.normal(size=(1, c, hkv, g, hd)), jnp.float32)
+    table = jnp.asarray([[3, 6]], jnp.int32)
+    # watermark 6 → slots 6..10 span page 3 (slots 6, 7) and page 6 (8..10)
+    pos = jnp.asarray([[6, 7, 8, 9, 10]], jnp.int32)
+    # tree: root → a → (b, c_sib); b → d   (two siblings share depth 2)
+    #   in-row:    0     1    2  3       4
+    parents = [-1, 0, 1, 1, 2]
+    depth = [0, 1, 2, 2, 3]
+    rpos = jnp.asarray([[6 + d for d in depth]], jnp.int32)
+    amask = np.zeros((1, c, c), bool)
+    for i, par in enumerate(parents):
+        amask[0, i, i] = True
+        j = par
+        while j >= 0:
+            amask[0, i, j] = True
+            j = parents[j]
+    out = paged_attention_chunk(q, k, ks, v, vs, table, pos,
+                                rpos=rpos, amask=jnp.asarray(amask),
+                                interpret=True)
+    ref = paged_attention_chunk_ref(q, k, ks, v, vs, table, pos,
+                                    rpos=rpos, amask=jnp.asarray(amask))
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+    # corrupt sibling b's KV slot (slot 8 = page 6, offset 0, the first
+    # slot past the page boundary): only b itself (node 2) and its child d
+    # (node 4) may change — sibling c_sib (node 3) and the b-free prefix
+    # must be bit-identical, proving the ancestor mask holds across pages
+    k2 = k.at[6, 0].set(127)
+    v2 = v.at[6, 0].set(127)
+    ks2 = ks.at[6, 0].set(50.0)
+    vs2 = vs.at[6, 0].set(50.0)
+    out2 = paged_attention_chunk(q, k2, ks2, v2, vs2, table, pos,
+                                 rpos=rpos, amask=jnp.asarray(amask),
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[:, :2]),
+                                  np.asarray(out2[:, :2]))
+    np.testing.assert_array_equal(np.asarray(out[:, 3]),
+                                  np.asarray(out2[:, 3]))
+    assert float(jnp.abs(out[:, 2] - out2[:, 2]).max()) > 1e-3
+    assert float(jnp.abs(out[:, 4] - out2[:, 4]).max()) > 1e-3
+
+
+def test_chunk_kernel_single_node_tree_equals_linear():
+    """A degenerate tree (every node's parent is its predecessor — one
+    chain) with rpos == pos and a lower-triangular ancestor mask is
+    bit-for-bit the plain linear speculation row (amask=None)."""
+    rng = np.random.default_rng(22)
+    npages, page, hkv, g, hd, nblk = 8, 8, 2, 4, 64, 3
+    k, ks, v, vs = _rand_pool(rng, npages, page, hkv, hd)
+    c = 6
+    q = jnp.asarray(rng.normal(size=(2, c, hkv, g, hd)), jnp.float32)
+    table = jnp.asarray(rng.integers(1, npages, (2, nblk)), jnp.int32)
+    pos = np.stack([np.arange(5, 5 + c), np.arange(12, 12 + c)]).astype(
+        np.int32)
+    pos[1, -2:] = -1                        # padding tail on one row
+    pos = jnp.asarray(pos)
+    tri = np.broadcast_to(np.tril(np.ones((c, c), bool)), (2, c, c)).copy()
+    tri[1, :, -2:] = False                  # padding is never an ancestor
+    out_tree = paged_attention_chunk(q, k, ks, v, vs, table, pos,
+                                     rpos=pos, amask=jnp.asarray(tri),
+                                     interpret=True)
+    out_lin = paged_attention_chunk(q, k, ks, v, vs, table, pos,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_tree), np.asarray(out_lin))
+
+
+# ---------------------------------------------------------------------------
 # Scheduler token-budget semantics against a fake executor
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,527 @@
+"""Tree speculative decoding + parallel sampling: greedy token identity
+vs sequential generate() across drafters (ngram / draft model / custom
+tree draft_fn), int8 KV pools, prefix sharing, mid-stream preemption and
+a forced 2-way mesh; scheduler tree packing (ancestor closure, depth
+positions, path-based emission) against a fake executor; `submit(n=...)`
+prompt-page sharing and sampled-marginal equivalence."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_model
+from repro.serving import GenerationEngine, SamplerConfig
+from repro.serving.kv_pager import KVPager, PagerConfig
+from repro.serving.scheduler import (Request, Scheduler, ngram_propose,
+                                     ngram_propose_tree)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = C.get_smoke_config("qwen25-05b")
+    m = build_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def _engine(m, params, **kw):
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("num_slots", 4)
+    kw.setdefault("page_size", 8)
+    return GenerationEngine(m, params, **kw)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+def _refs(eng, prompts, max_new):
+    return [np.asarray(eng.generate({"tokens": jnp.asarray(p)[None, :]},
+                                    max_new)[0]) for p in prompts]
+
+
+def _pager_invariants(pager):
+    free = set(pager.free_pages)
+    assert len(free) == len(pager.free_pages)
+    for pg in range(1, pager.cfg.num_pages):
+        if pg in free:
+            assert pager.page_ref[pg] == 0, pg
+        else:
+            assert pager.page_ref[pg] >= 1, pg
+    assert pager.pages_in_use == pager.cfg.num_pages - 1 - len(free)
+
+
+# ---------------------------------------------------------------------------
+# n-gram tree drafter (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_ngram_tree_chain_plus_alternates():
+    # suffix [5] occurs earlier at sites continuing with 8 (older: 6, 9)
+    ctx = np.array([5, 6, 1, 5, 9, 2, 5, 8, 3, 5], np.int32)
+    nodes = ngram_propose_tree(ctx, budget=5, fanout=3, max_n=3)
+    toks = [t for t, _ in nodes]
+    pars = [p for _, p in nodes]
+    # primary chain from the MOST RECENT site: [8, 3, 5] at depth 1..3
+    assert toks[:3] == [8, 3, 5] and pars[:3] == [-1, 0, 1]
+    # alternates from older sites, distinct first tokens, branching root
+    assert sorted(toks[3:]) == [6, 9] and pars[3:] == [-1, -1]
+    # topological: every parent precedes its child
+    assert all(p < i for i, p in enumerate(pars))
+
+
+def test_ngram_tree_budget_and_fallbacks():
+    ctx = np.array([5, 6, 1, 5, 9, 2, 5, 8, 3, 5], np.int32)
+    # budget 2 with fanout 3: chain keeps at least one node, one alternate
+    nodes = ngram_propose_tree(ctx, budget=2, fanout=3, max_n=3)
+    assert len(nodes) == 2 and nodes[0] == (8, -1) and nodes[1][1] == -1
+    # fanout 1 degenerates to the linear proposal
+    lin = ngram_propose(ctx, 4, max_n=3)
+    nodes = ngram_propose_tree(ctx, budget=4, fanout=1, max_n=3)
+    assert [t for t, _ in nodes] == lin
+    assert [p for _, p in nodes] == list(range(-1, len(nodes) - 1))
+    # no match → empty
+    assert ngram_propose_tree(np.array([1, 2, 3, 4], np.int32), 4, 2) == []
+
+
+# ---------------------------------------------------------------------------
+# Scheduler tree packing against a fake executor (no model)
+# ---------------------------------------------------------------------------
+
+class _FakeTreeExec:
+    """Scripted tree verifier: records the packed rpos/amask/parents and
+    accepts a scripted path per call."""
+
+    def __init__(self, script):
+        self.script = script           # list of (n_acc, path row) per call
+        self.calls = []
+
+    def run_batch(self, tokens, pos, row_slots, sample_idx, temps, topks,
+                  n_draft=None, tree=None):
+        b = tokens.shape[0]
+        if tree is None:
+            if n_draft is None:
+                return np.full(b, 100, np.int32)
+            return (np.full(b, 100, np.int32), np.zeros(b, np.int32))
+        self.calls.append({k: v.copy() for k, v in tree.items()}
+                          | {"tokens": tokens.copy(), "pos": pos.copy(),
+                             "n_draft": n_draft.copy()})
+        n_acc = np.zeros(b, np.int32)
+        path = np.zeros((b, tokens.shape[1]), np.int32)
+        na, prow = self.script.pop(0)
+        n_acc[0] = na
+        path[0, :len(prow)] = prow
+        return np.full(b, 100, np.int32), n_acc, path
+
+
+def _tree_sched(draft, script, k=4, fanout=2):
+    ex = _FakeTreeExec(script)
+    pager = KVPager(PagerConfig(num_pages=9, page_size=4, num_slots=2,
+                                pages_per_slot=4))
+    sched = Scheduler(pager, run_batch=ex.run_batch, chunk_size=4,
+                      spec_decode="draft_fn", spec_k=k, draft_fn=draft,
+                      spec_tree=True, spec_tree_fanout=fanout)
+    return sched, ex
+
+
+def test_fake_tree_packs_ancestor_closure_and_walks_path():
+    """A chain 7→8 plus alternate 9: the packed row must carry depth
+    rpos, the ancestor closure and in-row parents; a scripted acceptance
+    of the ALTERNATE emits via the path, then rolls the rest back."""
+    def draft(reqs):
+        return {slot: [(7, -1), (8, 0), (9, -1)]
+                for slot, _r, _c, _q, _k, _f in reqs}
+
+    sched, ex = _tree_sched(draft, script=[(1, [3])])
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=8))
+    sched.step()                                  # prefill → first token
+    ev = sched.step()                             # tree verify
+    # alternate (node 2, in-row 3) accepted, then the corrected token
+    assert [t for _r, t in ev] == [9, 100]
+    call = ex.calls[0]
+    q = 4                                         # root position
+    np.testing.assert_array_equal(call["pos"][0, :4], [q, q + 1, q + 2,
+                                                       q + 3])
+    np.testing.assert_array_equal(call["rpos"][0, :4],
+                                  [q, q + 1, q + 2, q + 1])   # 9 at depth 1
+    np.testing.assert_array_equal(call["parents"][0, :4], [-1, 0, 1, 0])
+    am = call["amask"][0]
+    np.testing.assert_array_equal(
+        am[:4, :4], np.array([[1, 0, 0, 0], [1, 1, 0, 0],
+                              [1, 1, 1, 0], [1, 0, 0, 1]], bool))
+    assert not am[4:].any() and not am[:, 4:].any()
+    assert call["n_draft"][0] == 3
+    # rollback kept root + the one accepted node: watermark q + 2
+    assert int(sched.pager.slot_len[0]) == q + 2
+    assert sched.stats.accepted_tokens == 1
+    assert sched.stats.draft_tokens == 3
+    assert sched.stats.rollbacks == 1
+    _pager_invariants(sched.pager)
+
+
+def test_fake_tree_rejects_non_topological_draft():
+    def draft(reqs):
+        return {slot: [(7, 1), (8, -1)] for slot, *_ in reqs}
+
+    sched, _ = _tree_sched(draft, script=[])
+    sched.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                         max_new_tokens=8))
+    sched.step()
+    with pytest.raises(ValueError, match="topological"):
+        sched.step()
+
+
+def test_adaptive_fanout_hedges_on_rejection():
+    """The tree-shape EMA: sustained rejection WIDENS the root fanout
+    (hedging), sustained acceptance narrows it back to 1 so the budget
+    buys depth."""
+    def draft(reqs):
+        return {slot: [(7, -1)] for slot, *_ in reqs}
+
+    sched, _ = _tree_sched(draft, script=[], fanout=4)
+    sched.adaptive_spec_k = True
+    assert sched.fanout_cur == 2
+    for _ in range(4):
+        sched._adapt_spec_k(0.0)
+    assert sched.fanout_cur == 4                  # grew to the cap
+    for _ in range(6):
+        sched._adapt_spec_k(1.0)
+    assert sched.fanout_cur == 1
+
+
+def test_tree_config_validation(model_and_params):
+    cfg, m, params = model_and_params
+    with pytest.raises(ValueError, match="spec_tree"):
+        _engine(m, params, spec_tree=True)        # no drafter
+    with pytest.raises(ValueError, match="fanout"):
+        _engine(m, params, spec_decode="ngram", spec_tree=True,
+                spec_tree_fanout=0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end greedy identity: tree-spec streams ≡ sequential generate()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fanout", [1, 2, 3])
+def test_greedy_ngram_tree_identity_across_fanout(model_and_params, fanout):
+    cfg, m, params = model_and_params
+    rng = np.random.default_rng(2)
+    pats = [rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+            for _ in range(2)]
+    prompts = [np.tile(p, 5) for p in pats] + _prompts(cfg, (9, 13), seed=3)
+
+    eng = _engine(m, params, spec_decode="ngram", spec_k=4, spec_tree=True,
+                  spec_tree_fanout=fanout)
+    rids = [eng.submit(p, 10) for p in prompts]
+    out = eng.drain()
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+    refs = _refs(eng, prompts, 10)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    st = eng.scheduler_stats
+    assert st.draft_tokens > 0
+    assert 0 <= st.accepted_tokens <= st.draft_tokens
+
+
+def test_greedy_draft_model_tree_identity(model_and_params):
+    """Draft model = the target: the primary chain matches the argmax
+    chain, so acceptance walks deep while alternates are rejected and
+    rolled back — streams stay identical."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (5, 12, 9), seed=9)
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  spec_tree=True, spec_tree_fanout=2,
+                  draft_model=m, draft_params=params)
+    rids = [eng.submit(p, 12) for p in prompts]
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.accepted_tokens > 0
+    assert st.spec_tokens_per_row > 2.0
+    refs = _refs(eng, prompts, 12)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_oracle_tree_draft_accepts_chain_rejects_alternates(model_and_params):
+    """A custom tree draft_fn whose chain is the true greedy continuation
+    and whose alternates are deliberately wrong: every step accepts the
+    full chain (never an alternate), the bonus token rides along, and
+    the stream is identical."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6, 11), seed=4)
+    eng0 = _engine(m, params)
+    refs = _refs(eng0, prompts, 9)
+    oracle = {}
+
+    def draft(reqs):
+        out = {}
+        for slot, rid, ctx, _q, k, fanout in reqs:
+            ref, plen = oracle[rid]
+            done = len(ctx) - plen
+            chain = [int(t) for t in ref[done:done + max(1, k - 1)]]
+            nodes = [(chain[0], -1)]
+            nodes += [(t, i) for i, t in enumerate(chain[1:])]
+            if len(nodes) < k:                     # one wrong alternate
+                nodes.append(((chain[0] + 1) % cfg.vocab_size, -1))
+            out[slot] = nodes
+        return out
+
+    eng = _engine(m, params, spec_decode="draft_model", spec_k=4,
+                  spec_tree=True, spec_tree_fanout=2, draft_fn=draft)
+    rids = [eng.submit(p, 9) for p in prompts]
+    for rid, p, ref in zip(rids, prompts, refs):
+        oracle[rid] = (ref, len(p))
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert st.accepted_tokens > 0
+    assert st.rollbacks > 0                        # alternates always lose
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+
+
+def test_tree_int8_kv_matches_plain_chunked_int8(model_and_params):
+    """Int8 pools: tree verify writes draft KV through the same
+    quantize-on-write codec and compaction moves raw codes, so greedy
+    tree-spec streams equal the no-spec chunked engine's int8 streams."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (5, 9, 12), seed=5)
+
+    def serve(**kw):
+        eng = _engine(m, params, kv_quant="int8", **kw)
+        rids = [eng.submit(p, 8) for p in prompts]
+        out = eng.drain()
+        assert eng._scheduler.pager.pages_in_use == 0
+        return [list(out[r]) for r in rids], eng
+
+    plain, _ = serve()
+    tree, eng_t = serve(spec_decode="ngram", spec_k=4, spec_tree=True)
+    assert tree == plain
+    # deterministic: a second tree run reproduces the streams
+    tree2, _ = serve(spec_decode="ngram", spec_k=4, spec_tree=True)
+    assert tree2 == tree
+
+
+def test_tree_with_prefix_sharing(model_and_params):
+    cfg, m, params = model_and_params
+    rng = np.random.default_rng(10)
+    prefix = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab_size, (t,)
+                                            ).astype(np.int32)])
+               for t in (4, 7, 3)]
+
+    def serve(prefix_id):
+        eng = _engine(m, params, spec_decode="ngram", spec_k=4,
+                      spec_tree=True)
+        rids = [eng.submit(p, 8, prefix_id=prefix_id) for p in prompts]
+        out = eng.drain()
+        assert eng._scheduler.pager.pages_in_use == 0
+        _pager_invariants(eng._scheduler.pager)
+        return [list(out[r]) for r in rids], eng._scheduler.stats
+
+    shared, st_s = serve("sys")
+    unshared, st_u = serve(None)
+    assert shared == unshared
+    assert st_s.prefix_shared_pages > 0
+
+
+def test_tree_mid_stream_preemption_identity(model_and_params):
+    """Preempting a slot between tree-verify steps spills its pages and
+    restores them later with zero recompute — the stream still equals
+    sequential generate()."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (7, 6), seed=6)
+    eng = _engine(m, params, num_slots=2, preemption=True,
+                  spec_decode="ngram", spec_k=4, spec_tree=True)
+    reps = [np.tile(p[:3], 4)[:len(p)] for p in prompts]
+    refs = _refs(eng, reps, 10)
+    rids = [eng.submit(p, 10) for p in reps]
+    eng.step()
+    eng.step()
+    assert eng.preempt(rids[0])                    # spill mid-stream
+    out = eng.drain()
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(out[rid], ref)
+    sst = eng.scheduler_stats
+    assert sst.preemptions >= 1 and sst.restores == sst.preemptions
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+
+
+def test_sampled_tree_deterministic_and_greedy_rows_exact(model_and_params):
+    """Sampled rows ride the tree dispatch (one-hot reduction keeps
+    greedy rows exact); per-seed streams are reproducible."""
+    cfg, m, params = model_and_params
+    prompts = _prompts(cfg, (6, 9), seed=11)
+
+    def serve():
+        eng = _engine(m, params, spec_decode="ngram", spec_k=3,
+                      spec_tree=True, seed=5)
+        r_g = eng.submit(np.tile(prompts[0][:3], 4), 10,
+                         sampler=SamplerConfig(0.0))
+        r_h = eng.submit(prompts[1], 10,
+                         sampler=SamplerConfig(temperature=1.2, top_k=8))
+        out = eng.drain()
+        assert eng._scheduler.pager.pages_in_use == 0
+        return {"g": list(out[r_g]), "h": list(out[r_h])}, eng
+
+    a, eng = serve()
+    b, _ = serve()
+    assert a == b
+    ref = eng.generate({"tokens": jnp.asarray(
+        np.tile(prompts[0][:3], 4))[None, :]}, 10)[0]
+    np.testing.assert_array_equal(a["g"], np.asarray(ref))
+    assert len(a["h"]) == 10
+
+
+# ---------------------------------------------------------------------------
+# Parallel sampling: submit(n=...)
+# ---------------------------------------------------------------------------
+
+def test_parallel_greedy_identical_streams_and_page_sharing(model_and_params):
+    """Greedy n=3 siblings emit identical streams while the prompt's full
+    KV pages are written once and aliased (refcount > 1 while alive)."""
+    cfg, m, params = model_and_params
+    prompt = _prompts(cfg, (20,), seed=7)[0]      # 2 full pages at page 8
+    eng = _engine(m, params)
+    ref = _refs(eng, [prompt], 8)[0]
+    rids = eng.submit(prompt, 8, n=3)
+    assert isinstance(rids, list) and len(rids) == 3
+    out = eng.drain()
+    for r in rids:
+        np.testing.assert_array_equal(out[r], ref)
+    st = eng.scheduler_stats
+    assert st.prefix_shared_pages >= 4            # 2 pages × 2 siblings
+    assert st.prefill_tokens_skipped > 0          # chunks actually skipped
+    assert eng._scheduler.pager.pages_in_use == 0
+    _pager_invariants(eng._scheduler.pager)
+
+
+def test_parallel_submit_shapes_and_validation(model_and_params):
+    cfg, m, params = model_and_params
+    eng = _engine(m, params)
+    rid = eng.submit(np.arange(4, dtype=np.int32), 2)
+    assert isinstance(rid, int)                   # n=1 keeps the scalar form
+    with pytest.raises(ValueError, match="n must be"):
+        eng.submit(np.arange(4, dtype=np.int32), 2, n=0)
+    # explicit prefix_id is respected for the sibling group
+    rids = eng.submit(np.arange(20, dtype=np.int32), 2, n=2,
+                      prefix_id="sys")
+    assert len(rids) == 2
+    eng.drain()
+    assert eng._scheduler.pager.pages_in_use == 0
+
+
+def test_parallel_sampled_marginals_match_independent_runs(model_and_params):
+    """The first sampled token of `submit(n=2)` siblings is distributed
+    like two independent single submissions: empirical first-token
+    distributions agree within a loose total-variation bound."""
+    cfg, m, params = model_and_params
+    prompt = _prompts(cfg, (20,), seed=8)[0]
+    samp = SamplerConfig(temperature=1.0, top_k=4)
+
+    def first_tokens(n_mode, reps, seed):
+        eng = _engine(m, params, seed=seed)
+        firsts = []
+        for _ in range(reps):
+            if n_mode:
+                rids = eng.submit(prompt, 1, sampler=samp, n=2)
+            else:
+                rids = [eng.submit(prompt, 1, sampler=samp)
+                        for _ in range(2)]
+            out = eng.drain()
+            firsts += [int(out[r][0]) for r in rids]
+        assert eng._scheduler.pager.pages_in_use == 0
+        return firsts
+
+    a = first_tokens(True, 40, seed=1)
+    b = first_tokens(False, 40, seed=2)
+    support = sorted(set(a) | set(b))
+    assert len(support) <= 4                      # top_k bounds the support
+    pa = np.array([a.count(t) for t in support], float) / len(a)
+    pb = np.array([b.count(t) for t in support], float) / len(b)
+    assert 0.5 * np.abs(pa - pb).sum() < 0.25     # TV distance, n=80 each
+    # siblings draw independently: with 40 pairs over a non-degenerate
+    # support, at least one pair must differ
+    if len(support) > 1 and pa.max() < 0.85:
+        assert any(a[2 * i] != a[2 * i + 1] for i in range(40))
+
+
+# ---------------------------------------------------------------------------
+# Forced 2-way mesh: tree spec + parallel sampling sharded ≡ unsharded
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import json
+import jax
+import numpy as np
+import repro.configs as C
+from repro.distributed import serving_mesh
+from repro.models import build_model
+from repro.serving import GenerationEngine
+
+cfg = dataclasses.replace(C.get_smoke_config("qwen25-05b"),
+                          num_heads=8, num_kv_heads=4, head_dim=16)
+m = build_model(cfg)
+params = m.init(jax.random.PRNGKey(0))
+out = {"device_count": jax.device_count()}
+
+rng = np.random.default_rng(0)
+pat = rng.integers(0, cfg.vocab_size, (3,)).astype(np.int32)
+prompts = [np.tile(pat, 6),
+           rng.integers(0, cfg.vocab_size, (9,)).astype(np.int32)]
+
+
+def serve(mesh):
+    eng = GenerationEngine(m, params, max_seq=64, num_slots=4, page_size=8,
+                           mesh=mesh, spec_decode="ngram", spec_k=4,
+                           spec_tree=True, spec_tree_fanout=2,
+                           kv_quant="int8")
+    rids = [eng.submit(p, 10) for p in prompts]
+    rids += eng.submit(prompts[0], 10, n=2)
+    out = eng.drain()
+    st = eng.scheduler_stats
+    assert eng._scheduler.pager.pages_in_use == 0
+    return [[int(t) for t in out[r]] for r in rids], st
+
+
+ref, st_ref = serve(None)
+got, st = serve(serving_mesh(2))
+out["spec_fired"] = st_ref.draft_tokens > 0 and st.draft_tokens > 0
+out["identical_2"] = got == ref
+out["parallel_identical"] = got[2] == got[3] == got[0]
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def mesh_result():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], cwd=".",
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_tree_sharded_streams_token_identical(mesh_result):
+    assert mesh_result["device_count"] == 2
+    assert mesh_result["spec_fired"]
+    assert mesh_result["identical_2"]
+    assert mesh_result["parallel_identical"]

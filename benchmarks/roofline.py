@@ -3,6 +3,13 @@
 Reads every dry-run record (written by `repro.launch.dryrun`) and prints the
 three-term roofline per (arch × shape × mesh), the dominant term, MODEL_FLOPS
 / HLO_FLOPs, and the skip list — i.e. the EXPERIMENTS.md §Roofline source.
+
+Also prints the serving-disaggregation table: per decoder arch, the
+prefill vs decode arithmetic intensity against the machine balance, which
+side of the roofline each phase lands on, and the predicted crossover
+prompt length past which splitting the two phases onto separate engines
+pays (one prefill admission outweighs a full decode step — the policy
+`serving.disagg.DisaggController` uses to place requests).
 """
 from __future__ import annotations
 
@@ -11,8 +18,49 @@ import json
 import os
 
 import repro.configs as C
+from repro.roofline.costmodel import disagg_report
 
 RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+DISAGG_DECODE_BATCH = 128
+DISAGG_CONTEXT = 4096
+
+
+def run_disagg(csv_rows: list) -> dict:
+    """Prefill-vs-decode intensity + predicted disagg crossover per arch."""
+    hdr = (f"{'arch':22s} {'prefill F/B':>11s} {'decode F/B':>10s} "
+           f"{'prefill':>8s} {'decode':>7s} {'disagg?':>7s} "
+           f"{'crossover':>9s}")
+    print()
+    print(f"serving disaggregation (decode batch {DISAGG_DECODE_BATCH}, "
+          f"context {DISAGG_CONTEXT}):")
+    print(hdr)
+    print("-" * len(hdr))
+    reports = {}
+    for arch in C.list_archs():
+        cfg = C.get_config(arch)
+        if cfg.is_encoder:
+            csv_rows.append((f"roofline/disagg/{arch}", "skipped",
+                             "encoder arch — no prefill/decode split"))
+            continue
+        rep = disagg_report(cfg, decode_batch=DISAGG_DECODE_BATCH,
+                            context=DISAGG_CONTEXT)
+        reports[arch] = rep
+        cross = rep["crossover_prompt_tokens"]
+        print(f"{arch:22s} {rep['prefill_intensity']:11.1f} "
+              f"{rep['decode_intensity']:10.1f} "
+              f"{rep['prefill_bound']:>8s} {rep['decode_bound']:>7s} "
+              f"{str(rep['disaggregate']):>7s} "
+              f"{str(cross):>9s}")
+        csv_rows.append((
+            f"roofline/disagg/{arch}",
+            str(cross),
+            f"prefill {rep['prefill_bound']}-bound "
+            f"{rep['prefill_intensity']:.0f} F/B, decode "
+            f"{rep['decode_bound']}-bound {rep['decode_intensity']:.0f} "
+            f"F/B, balance {rep['machine_balance']:.0f}, "
+            f"disaggregate={rep['disaggregate']}"))
+    return reports
 
 
 def load_records(results_dir: str = RESULTS) -> list[dict]:
@@ -72,7 +120,8 @@ def run(csv_rows: list) -> dict:
     for arch in C.list_archs():
         for cell, why in C.skipped_cells(arch).items():
             csv_rows.append((f"roofline/{arch}/{cell}", "skipped", why))
-    return {"cells": len(recs)}
+    disagg = run_disagg(csv_rows)
+    return {"cells": len(recs), "disagg": disagg}
 
 
 if __name__ == "__main__":

@@ -1,0 +1,132 @@
+#!/usr/bin/env python
+"""Gate the serving bench trajectory across the run history.
+
+Compares the two most recent *smoke* records in ``BENCH_serving.json``
+(like-for-like: smoke and full runs have different workloads) and fails
+when the newest run regresses against the previous one:
+
+  * **throughput metrics** — every ``serving/*`` metric whose name ends
+    in ``_tps`` or contains ``tokens_per_step`` must not drop by more
+    than the tolerance (default 0.8, i.e. only a catastrophic >80 % drop
+    fails — CI machines are noisy, and this gate exists to catch
+    "the fast path silently stopped being used", not 10 % jitter).
+    Override with ``--tolerance`` or ``BENCH_TRAJECTORY_TOLERANCE``.
+  * **identity metrics** — any ``*token_identity*`` metric or
+    ``identity_sections`` entry that was ``True`` in the previous record
+    must still be ``True`` (and still be present): a True→False or
+    True→missing flip is a hard fail at any tolerance, because it means
+    an asserted equivalence was lost or silently stopped running.
+
+With fewer than two smoke records the gate warns and exits 0 — a fresh
+clone (or a just-initialised history) must not be red. Each record is
+stamped with its git commit and jax version by ``bench_serving.py``, so
+a failure here names the commit pair that bracketed the regression.
+"""
+import argparse
+import json
+import os
+import pathlib
+import sys
+
+TPS_HINTS = ("_tps",)
+STEP_HINTS = ("tokens_per_step",)
+IDENTITY_HINT = "token_identity"
+
+
+def _numeric(value):
+    """Parse the bench's stringly-typed metric values ("1151.7", "61.6%",
+    "2.1x"); None when the value isn't a number."""
+    s = str(value).strip().rstrip("%x")
+    try:
+        return float(s)
+    except ValueError:
+        return None
+
+
+def _is_throughput(name):
+    return (any(name.endswith(h) for h in TPS_HINTS)
+            or any(h in name for h in STEP_HINTS))
+
+
+def _stamp(rec):
+    commit = str(rec.get("git_commit", "unknown"))[:12]
+    return f"{commit} @ {rec.get('timestamp', 0):.0f}"
+
+
+def compare(prev, last, tolerance):
+    """Return a list of regression strings (empty = trajectory ok)."""
+    bad = []
+    pm, lm = prev.get("metrics", {}), last.get("metrics", {})
+    for name, pval in sorted(pm.items()):
+        if IDENTITY_HINT in name:
+            if str(pval) == "True" and str(lm.get(name)) != "True":
+                bad.append(f"identity lost: {name} "
+                           f"{pval} -> {lm.get(name, '<missing>')}")
+            continue
+        if not _is_throughput(name):
+            continue
+        p, c = _numeric(pval), _numeric(lm.get(name))
+        if p is None or p <= 0:
+            continue
+        if c is None:
+            bad.append(f"throughput metric vanished: {name} (was {pval})")
+        elif c < p * (1.0 - tolerance):
+            bad.append(f"throughput collapsed: {name} {p:.1f} -> {c:.1f} "
+                       f"({(1 - c / p) * 100:.0f}% drop > "
+                       f"{tolerance * 100:.0f}% tolerance)")
+    ps = prev.get("identity_sections", {})
+    ls = last.get("identity_sections", {})
+    for sec, val in sorted(ps.items()):
+        if val is True and ls.get(sec) is not True:
+            bad.append(f"identity section lost: {sec} "
+                       f"True -> {ls.get(sec, '<missing>')}")
+    return bad
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="compare the two most recent smoke bench records")
+    ap.add_argument("--history-file", default=None,
+                    help="run-history JSON (default: repo-root "
+                         "BENCH_serving.json)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="max fractional throughput drop (default 0.8, "
+                         "env BENCH_TRAJECTORY_TOLERANCE)")
+    args = ap.parse_args(argv)
+    tol = args.tolerance
+    if tol is None:
+        tol = float(os.environ.get("BENCH_TRAJECTORY_TOLERANCE", "0.8"))
+    if not 0.0 < tol < 1.0:
+        print(f"TRAJECTORY: bad tolerance {tol} (need 0 < t < 1)")
+        return 2
+    path = pathlib.Path(args.history_file) if args.history_file else \
+        pathlib.Path(__file__).resolve().parent.parent / \
+        "BENCH_serving.json"
+    try:
+        history = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"TRAJECTORY: warn-only — history unreadable ({e})")
+        return 0
+    smoke = [r for r in history if isinstance(r, dict) and r.get("smoke")]
+    if len(smoke) < 2:
+        print(f"TRAJECTORY: warn-only — {len(smoke)} smoke record(s), "
+              "need 2 to compare")
+        return 0
+    prev, last = smoke[-2], smoke[-1]
+    bad = compare(prev, last, tol)
+    tag = f"{_stamp(prev)} vs {_stamp(last)}"
+    for b in bad:
+        print(f"TRAJECTORY: {b}")
+    if bad:
+        print(f"TRAJECTORY: FAILED ({len(bad)} regressions, {tag})")
+        return 1
+    n_tps = sum(1 for k in prev.get("metrics", {}) if _is_throughput(k))
+    n_id = (sum(1 for k in prev.get("metrics", {}) if IDENTITY_HINT in k)
+            + len(prev.get("identity_sections", {})))
+    print(f"TRAJECTORY: ok ({n_tps} throughput + {n_id} identity metrics, "
+          f"tolerance {tol:.0%}, {tag})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,13 +6,15 @@
 #
 # Gates, in order: docs-link checker, ruff lint (skipped with a notice if
 # ruff is not installed), the serving benchmark's --smoke mode (chunked
-# serving exercised end-to-end), then every tests/test_*.py in its own
-# pytest process under a timeout (one hanging file must not sink the whole
+# serving exercised end-to-end), the bench-trajectory checker (the fresh
+# smoke record vs the previous one — throughput within tolerance,
+# identities still True), then every tests/test_*.py in its own pytest
+# process under a timeout (one hanging file must not sink the whole
 # gate), writing per-file JUnit XML into results_dir (default
 # results/tier1) and printing a summary line
 #
 #   TIER1 files=<n> passed=<p> failed=<f> errors=<e> skipped=<s> \
-#       timeout=<t> doclinks=<d> lint=<l> bench=<b>
+#       timeout=<t> doclinks=<d> lint=<l> bench=<b> traj=<j>
 #
 # and exits non-zero if failures+errors+timeouts exceed the baseline in
 # scripts/tier1_baseline.txt (tracked in git — update it deliberately when
@@ -132,15 +134,26 @@ if not (isinstance(hist, list) and hist):
     sys.exit(1)
 rec = hist[-1]
 need = ("schema", "timestamp", "smoke", "metrics", "identity_sections",
-        "awq")
+        "awq", "git_commit", "jax_version")
 missing = [k for k in need if k not in rec]
 if missing:
     print(f"BENCH-HISTORY: last record missing keys {missing}")
     sys.exit(1)
 print(f"BENCH-HISTORY: ok ({len(hist)} records, "
-      f"last smoke={rec['smoke']} schema={rec['schema']})")
+      f"last smoke={rec['smoke']} schema={rec['schema']} "
+      f"commit={str(rec['git_commit'])[:12]})")
 PY
     bench_rc=$?
+fi
+
+# --- bench trajectory gate: the record the smoke run just appended must
+# not collapse vs the previous smoke record — throughput metrics within
+# tolerance, asserted identities still True. Warn-only (rc 0) when the
+# history has fewer than two smoke records.
+traj_rc=0
+if [ "$bench_rc" -eq 0 ]; then
+    python scripts/check_bench_trajectory.py
+    traj_rc=$?
 fi
 
 timeouts=0
@@ -156,7 +169,7 @@ for f in tests/test_*.py; do
 done
 
 python - "$RESULTS_DIR" "$timeouts" "$BASELINE_FILE" "$link_rc" \
-    "$lint_rc" "$bench_rc" <<'PY'
+    "$lint_rc" "$bench_rc" "$traj_rc" <<'PY'
 import glob
 import os
 import sys
@@ -167,6 +180,7 @@ results_dir, timeouts, baseline_path = (sys.argv[1], int(sys.argv[2]),
 link_errors = int(sys.argv[4])
 lint_errors = 1 if int(sys.argv[5]) else 0
 bench_errors = 1 if int(sys.argv[6]) else 0
+traj_errors = 1 if int(sys.argv[7]) else 0
 tests = passed = failed = errors = skipped = files = 0
 for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     files += 1
@@ -182,10 +196,12 @@ for path in sorted(glob.glob(os.path.join(results_dir, "*.xml"))):
     errors += e
     skipped += s
     passed += t - f - e - s
-red = failed + errors + timeouts + link_errors + lint_errors + bench_errors
+red = (failed + errors + timeouts + link_errors + lint_errors
+       + bench_errors + traj_errors)
 print(f"TIER1 files={files} passed={passed} failed={failed} "
       f"errors={errors} skipped={skipped} timeout={timeouts} "
-      f"doclinks={link_errors} lint={lint_errors} bench={bench_errors}")
+      f"doclinks={link_errors} lint={lint_errors} bench={bench_errors} "
+      f"traj={traj_errors}")
 
 if not os.path.exists(baseline_path):
     with open(baseline_path, "w") as fh:

@@ -341,6 +341,24 @@ def spill_sharding(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def handoff_sharding(mesh: Mesh) -> NamedSharding:
+    """Sharding for KV page strips crossing ENGINES (disaggregated
+    prefill → decode handoff, `serving.disagg`).
+
+    Identical to `spill_sharding` by construction, and that identity is
+    the load-bearing property of cross-mesh disaggregation: because the
+    gather's out-sharding leaves the strip **replicated** (the all-gather
+    over ``model`` happens inside the prefill engine's dispatch), the
+    wire image carries no trace of the prefill mesh. A decode engine on a
+    *different* mesh — more chips, fewer chips, or no mesh at all — feeds
+    the same strip to its scatter, whose in-sharding re-stripes it over
+    the decode mesh's KV-head axis via `paged_cache_pspec`. The handoff
+    is therefore a reshard-on-adopt: no per-mesh-pair transfer code, and
+    host page IDs stay device-agnostic on both sides.
+    """
+    return spill_sharding(mesh)
+
+
 def serving_mesh(model: int | None = None) -> Mesh:
     """A 1-D ``('model',)`` mesh over the first ``model`` local devices.
 

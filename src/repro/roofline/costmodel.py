@@ -199,3 +199,101 @@ def analytic_terms(cfg: ModelConfig, cell_name: str, chips: int,
         "analytic_compute_s": cc.flops / chips / PEAK_FLOPS,
         "analytic_memory_s": cc.total_bytes / chips / HBM_BW,
     }
+
+
+# ---------------------------------------------------------------------------
+# Disaggregated-serving split policy (serving.disagg / ROADMAP #5)
+# ---------------------------------------------------------------------------
+# Prefill is compute-bound (S×ctx score work per admitted token), decode is
+# bandwidth-bound (whole cache line + full weight stream per emitted token).
+# The policy compares each side's arithmetic intensity to the machine
+# balance point and predicts the prompt length past which one prefill's
+# wall time convoys a full decode step — the crossover where running the
+# two phases on separate engines starts to pay for the page transfer.
+
+def serving_cell(step: str, seq_len: int, batch: int = 1) -> ShapeCell:
+    """Ad-hoc shape cell for serving-side placement decisions (the fixed
+    `SHAPES` registry covers the paper's report grid, not every serving
+    point the scheduler sees)."""
+    return ShapeCell(f"{step}_{seq_len}x{batch}", seq_len, batch, step)
+
+
+def serving_intensity(cfg: ModelConfig, *, step: str, seq_len: int,
+                      batch: int = 1, quant: bool = False,
+                      chips: int = 1) -> dict:
+    """Roofline terms for one serving-side dispatch shape.
+
+    ``intensity`` is FLOPs/byte; a dispatch is compute-bound when it
+    exceeds the machine balance (PEAK_FLOPS / HBM_BW), else memory-bound.
+    """
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+    cc = cell_costs(cfg, serving_cell(step, seq_len, batch), quant)
+    t_c = cc.flops / chips / PEAK_FLOPS
+    t_m = cc.total_bytes / chips / HBM_BW
+    return {
+        "flops": cc.flops,
+        "bytes": cc.total_bytes,
+        "intensity": cc.flops / max(cc.total_bytes, 1.0),
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "time_s": max(t_c, t_m),
+        "bound": "compute" if t_c >= t_m else "memory",
+    }
+
+
+def _prefill_time_s(cfg: ModelConfig, seq_len: int, quant: bool,
+                    chips: int) -> float:
+    return serving_intensity(cfg, step="prefill", seq_len=seq_len,
+                             quant=quant, chips=chips)["time_s"]
+
+
+def disagg_report(cfg: ModelConfig, *, decode_batch: int = 8,
+                  context: int = 4096, quant: bool = False,
+                  prefill_chips: int = 1, decode_chips: int = 1) -> dict:
+    """Roofline-derived prefill/decode disaggregation policy for one arch.
+
+    Returns the two sides' arithmetic intensity vs the machine balance,
+    whether disaggregation is predicted to pay (prefill compute-bound AND
+    decode memory-bound — the phases want different hardware operating
+    points), and ``crossover_prompt_tokens``: the smallest prompt whose
+    single prefill costs more wall time than one full decode step over
+    ``decode_batch`` slots at ``context`` — past it, a unified engine
+    admitting that prompt stalls every decoding slot by more than one
+    inter-token interval, which is exactly the convoy the disagg bench
+    measures. ``None`` when no prompt up to ``context`` crosses (unified
+    stays the right default — small deployments land here).
+    """
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+    pre = serving_intensity(cfg, step="prefill", seq_len=context,
+                            quant=quant, chips=prefill_chips)
+    dec = serving_intensity(cfg, step="decode", seq_len=context,
+                            batch=decode_batch, quant=quant,
+                            chips=decode_chips)
+    # bracket the crossover by doubling, then bisect to page granularity
+    crossover = None
+    lo, s = 1, 16
+    while s <= context:
+        if _prefill_time_s(cfg, s, quant, prefill_chips) > dec["time_s"]:
+            hi = s
+            while hi - lo > 16:
+                mid = (lo + hi) // 2
+                if _prefill_time_s(cfg, mid, quant,
+                                   prefill_chips) > dec["time_s"]:
+                    hi = mid
+                else:
+                    lo = mid
+            crossover = hi
+            break
+        lo, s = s, s * 2
+    return {
+        "machine_balance": PEAK_FLOPS / HBM_BW,
+        "prefill_intensity": pre["intensity"],
+        "decode_intensity": dec["intensity"],
+        "prefill_bound": pre["bound"],
+        "decode_bound": dec["bound"],
+        "prefill_time_s": pre["time_s"],
+        "decode_step_time_s": dec["time_s"],
+        "disaggregate": (pre["bound"] == "compute"
+                         and dec["bound"] == "memory"),
+        "crossover_prompt_tokens": crossover,
+    }

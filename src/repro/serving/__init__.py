@@ -1,7 +1,9 @@
+from repro.serving.disagg import (  # noqa: F401
+    DecodeEngine, DisaggController, DisaggStats, KVHandoff, PrefillEngine)
 from repro.serving.engine import (  # noqa: F401
     EngineStats, GenerationEngine, SamplerConfig, sample, sample_batched)
 from repro.serving.kv_pager import (  # noqa: F401
-    KVPager, PageAllocationError, PagerConfig, PagerStats, SpillRecord,
-    commit_prefill)
+    HandoffRecord, KVPager, PageAllocationError, PagerConfig, PagerStats,
+    SpillRecord, commit_prefill)
 from repro.serving.scheduler import (  # noqa: F401
     Request, Scheduler, ngram_propose, spec_k_buckets, width_family)

@@ -636,6 +636,63 @@ class GenerationEngine:
             self._paged_cache, self._spill_ids_dev(fresh_ids, handle["n"]),
             handle["strips"])
 
+    # --- cross-engine KV page handoff (disaggregated prefill/decode) ------
+    def _ensure_spill_movers(self) -> None:
+        """The disagg handoff path reuses the preemption spill movers
+        (gather/scatter over **replicated** strips — which is exactly why
+        a decode engine on a different mesh can adopt them); build them
+        lazily for engines that never enabled preemption. The wrappers
+        are `_exec_jit` caches: nothing compiles until first use."""
+        if self._scheduler is None:
+            self._scheduler = self._serving_init()
+        if not hasattr(self, "_spill_gather"):
+            self._init_spill_tier()
+
+    def handoff_gather(self, phys_ids: list[int]) -> dict:
+        """Gather ``phys_ids``'s pool bytes for a cross-engine handoff.
+
+        Dispatched async like `_exec_spill` — the strips snapshot the
+        current cache value (functional arrays: the pager may free the
+        slot immediately after), and the device→host DMA overlaps
+        whatever the caller dispatches next (the decode engine's step, in
+        `DisaggController`). `handoff_wire` materializes the wire image.
+        """
+        self._ensure_spill_movers()
+        return self._exec_spill(phys_ids)
+
+    def handoff_wire(self, handle: dict) -> tuple[dict, int]:
+        """Block on a `handoff_gather` and return ``(strips, wire_bytes)``.
+
+        Strips come back as host numpy trimmed to the real page count —
+        the honest wire image: int8 pools ship codes + per-position scale
+        strips (~2× fewer bytes than bf16), and because the gather leaves
+        the mesh replicated (`distributed.sharding.spill_sharding`) the
+        image is mesh-agnostic — a decode engine on a *different* mesh
+        adopts it unchanged.
+        """
+        n = handle["n"]
+        strips = jax.tree.map(lambda a: np.asarray(a)[:, :n],
+                              handle["strips"])
+        wire = sum(leaf.nbytes for leaf in jax.tree.leaves(strips))
+        return strips, wire
+
+    def handoff_scatter(self, strips: dict, strip_idx: list[int],
+                        fresh_ids: list[int]) -> None:
+        """Scatter wire strips ``strip_idx`` into this engine's freshly
+        drawn pages (the pager's `adopt` already rebuilt the page table;
+        pages it aliased against the local prefix index ship nothing and
+        are absent here)."""
+        self._ensure_spill_movers()
+        if not fresh_ids:
+            return
+        assert len(strip_idx) == len(fresh_ids)
+        n = len(fresh_ids)
+        idx = np.zeros(self._spill_bucket(n), np.int64)
+        idx[:n] = strip_idx                 # pad cols land on scratch page 0
+        sub = jax.tree.map(lambda a: a[:, idx], strips)
+        self._paged_cache = self._spill_scatter(
+            self._paged_cache, self._spill_ids_dev(fresh_ids, n), sub)
+
     @staticmethod
     def _exec_jit(fn, **jit_kw):
         """jit ``fn`` keyed on the ACTIVE `core.qlinear.ExecutionConfig`.

@@ -68,6 +68,29 @@ Speculative-decode rollback (`truncate`):
     causally masked to positions ≤ the query position, and the next
     accepted token rewrites its position before anything reads it.
 
+Cross-engine page handoff (`export_slot` / `adopt` — disaggregated
+prefill/decode, see `serving.disagg`):
+
+  * `export_slot(slot)` is a **read-only** snapshot of an active slot for
+    shipping to a *different* engine's pool: the physical page ids in
+    logical order (every page ships — the target pool holds none of this
+    pool's bytes) plus a `HandoffRecord` carrying the slot length, the
+    commit watermark, and each page's prefix-index chain key (if any).
+    The source engine gathers the ids' bytes (same jit'd gather as
+    `peek_spill`), then frees the slot normally — functional arrays make
+    the gathered strips immune to the release.
+  * `adopt(record, max_new_tokens=...)` re-places the request in THIS
+    pool: fresh physical pages are drawn for the shipped strips and the
+    slot enters fully committed (decode resumes with **zero prefill
+    recompute**). Pages whose chain key is already in this pool's prefix
+    index are **aliased instead of transferred** (refcount += 1, zero
+    wire bytes — the content hash guarantees identical bytes), and
+    freshly transferred indexed pages re-register here exactly once, so
+    a hot prefix is never duplicated no matter how many handoffs carry
+    it; the sticky-pin semantics of `register_prefix` apply. Raises
+    `PageAllocationError` without mutating anything when capacity is
+    short — the caller retries later.
+
 Cross-burst prefix pinning: `pin_prefix(prefix_id)` takes a refcount on
 every page indexed under that namespace (and on pages registered under
 it later), so a hot prefix survives its last owning request and the next
@@ -183,6 +206,24 @@ class SpillRecord:
     @property
     def n_spilled(self) -> int:
         return len(self.spilled_pages)
+
+
+@dataclasses.dataclass
+class HandoffRecord:
+    """Pool-independent image of one slot for a cross-engine KV handoff
+    (disaggregated prefill → decode, see `serving.disagg`).
+
+    Unlike `SpillRecord` this carries no physical page ids — those are
+    meaningless in the adopting pool. Per logical page it ships the
+    prefix-index chain key + namespace (or None for unindexed pages) so
+    the adopter can alias pages it already holds and re-register the
+    rest, plus the slot length / commit watermark that make re-admission
+    a pure decode resume (zero prefill recompute).
+    """
+    n_pages: int                                  # logical pages shipped
+    page_meta: list[tuple[bytes, bytes] | None]   # (chain key, ns) per page
+    slot_len: int                                 # tokens of valid KV
+    committed: int                                # chunked-prefill watermark
 
 
 def _chain_key(prev: bytes, chunk: np.ndarray) -> bytes:
@@ -700,6 +741,121 @@ class KVPager:
         rec.restored = True
         del self.spill_records[rec.spill_id]
         self.version += 1
+
+    # -------------------------------------- cross-engine page handoff tier
+    def export_slot(self, slot: int) -> tuple[HandoffRecord, list[int]]:
+        """Read-only snapshot of an active slot for shipping to ANOTHER
+        engine's pool (disaggregated prefill → decode handoff).
+
+        Returns ``(record, phys_ids)`` with the physical pages in logical
+        order. Every mapped page ships — unlike `peek_spill`, aliasing
+        status in THIS pool is irrelevant because the target pool holds
+        none of these bytes (the adopter dedups against its own prefix
+        index instead, via the chain keys in the record). Nothing is
+        mutated: the caller gathers the ids' bytes off the device and
+        then releases the slot with the ordinary `free_slot` — the
+        functional gathered arrays are immune to the release.
+        """
+        if slot not in self.slot_pages:
+            raise PageAllocationError(f"export of inactive slot {slot}")
+        pages = list(self.slot_pages[slot])
+        meta: list[tuple[bytes, bytes] | None] = [
+            (self._page_key[pg], self._page_ns[pg])
+            if pg in self._page_key else None
+            for pg in pages]
+        return HandoffRecord(
+            n_pages=len(pages), page_meta=meta,
+            slot_len=int(self.slot_len[slot]),
+            committed=self.slot_committed.get(slot, 0)), pages
+
+    def _adopt_plan(self, rec: HandoffRecord
+                    ) -> list[tuple[str, int]]:
+        """Per logical page: ("alias", phys) when this pool's prefix index
+        already holds the chain key, else ("fresh", strip_index)."""
+        plan: list[tuple[str, int]] = []
+        for i, m in enumerate(rec.page_meta):
+            if m is not None and m[0] in self.prefix_index:
+                plan.append(("alias", self.prefix_index[m[0]]))
+            else:
+                plan.append(("fresh", i))
+        return plan
+
+    def can_adopt(self, rec: HandoffRecord, max_new_tokens: int) -> bool:
+        """Could `adopt(rec, ...)` succeed right now? Needs a free slot,
+        fresh pages for every non-aliased strip, the decode-tail
+        reservation (or optimistic headroom), and slot capacity."""
+        total = max(rec.n_pages,
+                    self.pages_for(rec.slot_len + max_new_tokens - 1))
+        if not self.free_slots or total > self.cfg.pages_per_slot:
+            return False
+        n_fresh = sum(1 for tag, _ in self._adopt_plan(rec)
+                      if tag == "fresh")
+        if self.cfg.optimistic:
+            need = n_fresh + (1 if max_new_tokens > 1 else 0)
+        else:
+            need = n_fresh + (total - rec.n_pages)
+        return len(self.free_pages) - self._reserved >= need
+
+    def adopt(self, rec: HandoffRecord, max_new_tokens: int
+              ) -> tuple[int, list[tuple[int, int]]]:
+        """Place an exported slot into THIS pool (the decode half of the
+        disaggregated handoff).
+
+        Returns ``(slot, scatter)`` where ``scatter`` is a list of
+        ``(strip_index, fresh_page)`` pairs — the engine scatters those
+        wire strips into the freshly drawn pages. Pages whose chain key
+        is already in this pool's prefix index are **aliased** instead
+        (refcount += 1, nothing scattered — the content hash guarantees
+        identical bytes), and freshly scattered indexed pages re-register
+        here with `register_prefix`'s sticky-pin semantics, so a hot
+        prefix exists exactly once no matter how many handoffs carry it.
+        The slot re-admits fully committed at the shipped watermark with
+        the decode tail reserved as `alloc_slot` would — decode resumes
+        with zero prefill recompute. Raises `PageAllocationError` without
+        mutating anything when capacity is short (callers retry later).
+        """
+        if not self.can_adopt(rec, max_new_tokens):
+            raise PageAllocationError(
+                f"cannot adopt handoff ({rec.n_pages} pages, "
+                f"slot_len={rec.slot_len}, max_new={max_new_tokens}): "
+                f"free_slots={len(self.free_slots)} "
+                f"free_pages={len(self.free_pages)} "
+                f"reserved={self._reserved}")
+        plan = self._adopt_plan(rec)
+        total = max(rec.n_pages,
+                    self.pages_for(rec.slot_len + max_new_tokens - 1))
+        slot = self.free_slots.pop()
+        pages: list[int] = []
+        scatter: list[tuple[int, int]] = []
+        for i, (tag, ref) in enumerate(plan):
+            if tag == "alias":
+                self.page_ref[ref] += 1
+                pages.append(ref)
+                continue
+            pg = self.free_pages.pop()
+            self.page_ref[pg] = 1
+            pages.append(pg)
+            scatter.append((i, pg))
+            m = rec.page_meta[i]
+            if m is not None:
+                key, ns = m
+                # first carrier of this prefix chunk registers it here;
+                # later handoffs (and match_prefix admissions) alias it
+                self.prefix_index[key] = pg
+                self._page_key[pg] = key
+                self._page_ns[pg] = ns
+                if ns in self._pinned_ns:   # sticky pin: new pages join
+                    self.page_ref[pg] += 1
+                    self._pin_pages.setdefault(ns, set()).add(pg)
+        self.slot_pages[slot] = pages
+        self.page_tables[slot, :len(pages)] = pages
+        self.slot_len[slot] = rec.slot_len
+        self.slot_committed[slot] = rec.committed
+        reserve = 0 if self.cfg.optimistic else total - rec.n_pages
+        self.slot_reserved[slot] = reserve
+        self._reserved += reserve
+        self.version += 1
+        return slot, scatter
 
     # ---------------------------------------------------------- invariants
     def verify_invariants(self) -> None:

@@ -427,6 +427,13 @@ class Scheduler:
         self._preempt_seq = 0
         self.finished: dict[int, np.ndarray] = {}
         self.stats = SchedulerStats()
+        # disaggregated serving (see serving.disagg): rids whose first
+        # sampled token PARKS the slot for a cross-engine KV handoff
+        # instead of decoding here. Parked slots leave `self.slots` but
+        # keep their pager pages until the controller exports + frees
+        # them; they surface in `ready_handoffs` as (state, slot).
+        self.handoff_rids: set[int] = set()
+        self.ready_handoffs: list[tuple[_SlotState, int]] = []
 
     # ------------------------------------------------------------------ api
     def submit(self, request: Request) -> None:
@@ -451,13 +458,49 @@ class Scheduler:
             i -= 1
         self.queue.insert(i, request)
 
+    def admit_handoff(self, request: Request, generated: list[int],
+                      record) -> tuple[int, list[int], list[int]]:
+        """Adopt a cross-engine KV handoff as an already-decoding slot.
+
+        The pager re-places the shipped pages in this pool (aliasing any
+        the prefix index already holds — see `KVPager.adopt`) and the
+        slot enters with the prompt fully committed and ``generated``
+        already sampled by the prefill side, so **no prefill chunk is
+        ever scheduled for it**: decode-side TTFT is pure transfer cost.
+        Returns ``(slot, strip_indices, fresh_pages)``; the engine
+        scatters wire strip ``strip_indices[j]`` into ``fresh_pages[j]``.
+        Raises `PageAllocationError` (no mutation) when the pool is full
+        — the caller retries on a later step.
+        """
+        if not self.chunked:
+            raise ValueError("handoff adoption requires the chunked "
+                             "(token-budget) execution path")
+        generated = [int(t) for t in generated]
+        if not generated:
+            raise ValueError("a handoff must carry the first sampled token")
+        slot, scatter = self.pager.adopt(
+            record, max_new_tokens=request.max_new_tokens)
+        st = _SlotState(request=request, generated=generated,
+                        committed=len(request.tokens))
+        if st.done:
+            # nothing left to decode — the prefill side should have
+            # finished it there; undo the placement and refuse
+            self.pager.free_slot(slot)
+            raise ValueError("handoff request is already complete — "
+                             "collect it on the prefill side")
+        self.slots[slot] = st
+        self.stats.admitted += 1
+        self.stats.prefill_tokens_skipped += len(request.tokens)
+        return slot, [i for i, _ in scatter], [pg for _, pg in scatter]
+
     @property
     def num_active(self) -> int:
         return len(self.slots)
 
     @property
     def idle(self) -> bool:
-        return not self.queue and not self.slots and not self.preempted
+        return (not self.queue and not self.slots and not self.preempted
+                and not self.ready_handoffs)
 
     def step(self) -> list[tuple[int, int]]:
         """Admit → one dispatch over all slots → evict + backfill.
@@ -901,6 +944,14 @@ class Scheduler:
                 events.append((st.request.rid, tok))
                 if st.done:
                     self._finish(slot)
+                elif st.request.rid in self.handoff_rids:
+                    # disagg handoff point: the prompt's KV is fully
+                    # committed and the first token is sampled — park the
+                    # slot for export instead of decoding here. The pager
+                    # slot stays live (pages intact) until the controller
+                    # gathers its bytes and frees it.
+                    self.slots.pop(slot)
+                    self.ready_handoffs.append((st, slot))
                 continue
             # decode / verify row: emit the accepted draft prefix plus the
             # corrected (rejection) or bonus (full-acceptance) token,

@@ -80,6 +80,15 @@ Scenario sections:
     (wire KiB + adopt ms per handoff), and a mixed burst scores the
     convoy effect on the decode-side clock next to the roofline
     report's predicted disaggregation crossover.
+  * **multi-replica fleet (router)** — N engines behind the
+    prefix-affinity `Router`: a clustered-prefix Poisson burst served
+    with affinity placement vs. seeded-random placement (affinity must
+    skip strictly more prefill tokens; sustained tok/s is asserted at
+    full scale and reported at smoke scale), sustained throughput vs.
+    replica count {1, 2, 4}, a 1-replica fleet asserted token-identical
+    to the bare engine (gated section ``router_vs_single``), and an
+    elastic `drain_replica` under load that must lose and duplicate
+    nothing (every stream checked against bare-engine references).
 
 All metrics come from the engine's public `stats()` snapshot — the bench
 never reaches into scheduler or pager internals. Every **asserted
@@ -107,7 +116,7 @@ import repro.configs as C
 from repro.distributed import serving_mesh
 from repro.models import build_model
 from repro.roofline.costmodel import disagg_report
-from repro.serving import DisaggController, GenerationEngine
+from repro.serving import DisaggController, GenerationEngine, Router
 
 # identity sections the gate requires: each section sets its key to the
 # asserted comparison's outcome only after ACTUALLY running it — a
@@ -116,7 +125,8 @@ from repro.serving import DisaggController, GenerationEngine
 REQUIRED_IDENTITY = ("chunked_vs_oneshot_vs_generate", "spec_vs_plain",
                      "sharded_vs_unsharded", "awq_kernel_vs_ref",
                      "preempt_vs_uninterrupted", "tree_vs_plain",
-                     "parallel_vs_single", "disagg_vs_unified")
+                     "parallel_vs_single", "disagg_vs_unified",
+                     "router_vs_single")
 
 NUM_REQUESTS = 16
 NUM_SLOTS = 4
@@ -1308,6 +1318,207 @@ def run_slo(m, params, csv_rows, identity, smoke=False):
     return res
 
 
+# ---------------------------------------------------------------------------
+# Multi-replica fleet: prefix-affinity router
+# ---------------------------------------------------------------------------
+
+def make_cluster_workload(cfg, n_clusters=2, num_requests=8, prefix_len=32,
+                          new_tokens=8, rate=ARRIVAL_RATE, seed=11):
+    """Clustered-prefix Poisson burst: request ``i`` belongs to cluster
+    ``i % n_clusters`` and shares that cluster's page-aligned system
+    prefix. Returns (prefixes, [(arrival, prompt, max_new, prefix_id)])."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(0, cfg.vocab_size, (prefix_len,)
+                             ).astype(np.int32) for _ in range(n_clusters)]
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, num_requests))
+    reqs = []
+    for i in range(num_requests):
+        c = i % n_clusters
+        tail = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+        reqs.append((float(arrivals[i]),
+                     np.concatenate([prefixes[c], tail]),
+                     new_tokens, f"cluster{c}"))
+    return prefixes, reqs
+
+
+def _warm_fleet(fleet, prefixes):
+    """Pin every cluster prefix (sticky), run one request per cluster
+    through the fleet so the pages are resident, and zero the stats so
+    the timed burst reports only itself."""
+    for c, pfx in enumerate(prefixes):
+        fleet.pin_prefix(f"cluster{c}")
+        fleet.submit(np.concatenate(
+            [pfx, np.full((4,), c + 1, np.int32)]), 2,
+            prefix_id=f"cluster{c}")
+    fleet.drain()
+    fleet.reset_stats()
+
+
+def _run_fleet(router, workload):
+    """Replay a clustered workload through a Router; same contract as
+    `run_continuous` but fleet-wide (skipped = sum over replicas)."""
+    pending = sorted(enumerate(workload), key=lambda r: r[1][0])
+    arrival_of, first, finish = {}, {}, {}
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i][1][0] <= now:
+            _, (arrival, prompt, mn, pid) = pending[i]
+            rid = router.submit(prompt, mn, prefix_id=pid)
+            arrival_of[rid] = arrival
+            i += 1
+        events = router.step()
+        now = time.perf_counter() - t0
+        for rid, _tok in events:
+            if rid in arrival_of and rid not in first:
+                first[rid] = now
+        for rid in router.collect():
+            finish[rid] = now
+        if len(finish) == len(workload):
+            break
+        if i < len(pending) and router.idle:
+            time.sleep(0.0005)
+    dt = time.perf_counter() - t0
+    useful = sum(mn for _, _, mn, _ in workload)
+    skipped = sum(getattr(s, "prefill_tokens_skipped", 0)
+                  for s in router.stats())
+    return {"useful": useful, "dt": dt, "tps": useful / dt,
+            "ttft_p95": float(np.percentile(
+                [first[r] - arrival_of[r] for r in first], 95)),
+            "skipped": int(skipped)}
+
+
+def run_router(m, params, csv_rows, identity, smoke=False):
+    """Multi-replica serving fleet through the prefix-affinity `Router`.
+
+    Four measurements:
+
+      * **router_vs_single** (gated identity) — the same burst through a
+        bare engine and a 1-replica fleet must produce byte-identical
+        greedy streams: the router adds placement, never changes tokens.
+      * **affinity vs. random** — two warmed 2-replica fleets serve the
+        clustered burst; affinity placement routes each cluster to the
+        replica already holding its prefix pages and must skip strictly
+        more prefill tokens than seeded-random placement (tok/s asserted
+        at full scale, where the skipped work dominates wall clock).
+      * **throughput vs. replica count** — the same warmed burst through
+        fleets of 1/2(/4 at full scale); informational on one host
+        (replicas share the device), the scaling story is the row.
+      * **drain under load** — submit 2x the burst to the 2-replica
+        fleet, step a few times, `drain_replica(0)` mid-flight, then
+        drain the fleet: every stream must come back exactly once and
+        byte-equal to its bare-engine reference (zero loss, zero
+        duplication), with rerouted-request count and drain-phase TTFT
+        reported.
+    """
+    cfg = m.cfg
+    n_req = 8 if smoke else NUM_REQUESTS
+    mn = 8 if smoke else 16
+    # full scale doubles the shared prefix (8 pages): the skipped
+    # prefill has to dominate wall-clock noise for the tok/s assert
+    prefixes, workload = make_cluster_workload(
+        cfg, num_requests=n_req, new_tokens=mn,
+        prefix_len=32 if smoke else 64)
+    res: dict = {"topology": {}}
+
+    # --- 1-replica fleet ≡ bare engine (gated identity) ---------------
+    eng_ref = _fresh_engine(m, params)
+    eng_ref.warmup()
+    rids = [eng_ref.submit(p, mn_, prefix_id=pid)
+            for _, p, mn_, pid in workload]
+    refs = eng_ref.drain()
+    ref_streams = [list(refs[r]) for r in rids]
+    fleet1 = Router([_fresh_engine(m, params)])
+    fleet1.warmup()
+    grids = [fleet1.submit(p, mn_, prefix_id=pid)
+             for _, p, mn_, pid in workload]
+    fout = fleet1.drain()
+    identical = [list(fout[g]) for g in grids] == ref_streams
+    identity["router_vs_single"] = identical
+    res["identical"] = identical
+
+    # --- affinity vs random placement (both fleets warmed + pinned) ---
+    fleets = {}
+    for policy in ("affinity", "random"):
+        fleet = Router([_fresh_engine(m, params) for _ in range(2)],
+                       placement=policy, seed=7)
+        fleet.warmup()
+        _warm_fleet(fleet, prefixes)
+        r = _run_fleet(fleet, workload)
+        r["affinity_hits"] = fleet.router_stats.affinity_hits
+        res[policy] = r
+        fleets[policy] = fleet
+
+    # --- throughput vs replica count ----------------------------------
+    # the 2-replica number is the affinity fleet's run above; 1 (and 4,
+    # at full scale) get their own warmed fleets so every size pays the
+    # same pre-warm
+    scale = {2: res["affinity"]["tps"]}
+    sizes = (1,) if smoke else (1, 4)
+    for n in sizes:
+        fleet = Router([_fresh_engine(m, params) for _ in range(n)])
+        fleet.warmup()
+        _warm_fleet(fleet, prefixes)
+        scale[n] = _run_fleet(fleet, workload)["tps"]
+    res["scale_tps"] = {str(k): v for k, v in sorted(scale.items())}
+    res["topology"] = {
+        "fleet_sizes": sorted(scale), "mesh_axis": 1,
+        "devices": jax.device_count(),
+    }
+
+    # --- elastic drain under load: zero loss, zero duplication --------
+    fleet = fleets["affinity"]
+    both = workload + [(a, p, mn_, pid) for a, p, mn_, pid in workload]
+    drids = [fleet.submit(p, mn_, prefix_id=pid) for _, p, mn_, pid in both]
+    t0 = time.perf_counter()
+    first: dict[int, float] = {}
+    for _ in range(3):                  # work is genuinely in flight
+        for rid, _tok in fleet.step():
+            first.setdefault(rid, time.perf_counter() - t0)
+    for rid, _tok in fleet.drain_replica(0):
+        first.setdefault(rid, time.perf_counter() - t0)
+    dout = fleet.drain()
+    streams = [list(dout[r]) for r in drids if r in dout]
+    want = ref_streams + ref_streams    # greedy ⇒ placement-independent
+    res["drain"] = {
+        "lost": len(drids) - len(streams),
+        "duplicated": len(dout) - len(set(dout)),
+        "identical": streams == want,
+        "reroutes": fleet.router_stats.reroutes,
+        "drain_ttft_p95": float(np.percentile(
+            [first[r] for r in first], 95)) if first else 0.0,
+    }
+
+    aff, rnd = res["affinity"], res["random"]
+    csv_rows.extend([
+        ("serving/router_affinity_tps", f"{aff['tps']:.1f}",
+         f"2 replicas, {n_req}-request clustered burst, "
+         f"{aff['affinity_hits']} affinity hits"),
+        ("serving/router_random_tps", f"{rnd['tps']:.1f}",
+         "same burst, seeded-random placement"),
+        ("serving/router_affinity_prefill_skipped", str(aff["skipped"]),
+         "prompt tokens never recomputed (placed onto warm pages)"),
+        ("serving/router_random_prefill_skipped", str(rnd["skipped"]),
+         "random placement misses the warm replica about half the time"),
+        ("serving/router_scale_tps",
+         " ".join(f"{k}x:{v:.1f}" for k, v in sorted(res["scale_tps"]
+                                                     .items())),
+         "sustained tok/s vs replica count (one host: informational)"),
+        ("serving/router_identity", str(identical),
+         "1-replica fleet ≡ bare engine (greedy streams)"),
+        ("serving/router_drain_reroutes", str(res["drain"]["reroutes"]),
+         "queued requests moved off the draining replica, rids kept"),
+        ("serving/router_drain_ttft_p95_s",
+         f"{res['drain']['drain_ttft_p95']:.3f}",
+         "TTFT across the drain-under-load burst"),
+        ("serving/router_drain_zero_loss",
+         str(res["drain"]["lost"] == 0 and res["drain"]["identical"]),
+         "every stream delivered exactly once, byte-equal to references"),
+    ])
+    return res
+
+
 def run(csv_rows: list, smoke: bool = False) -> dict:
     cfg = C.get_smoke_config("qwen25-05b")
     m = build_model(cfg)
@@ -1338,6 +1549,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         disagg = run_disagg(csv_rows, identity, smoke=True)
         awq = run_awq(m, params, csv_rows, identity, smoke=True)
         slo = run_slo(m, params, csv_rows, identity, smoke=True)
+        router = run_router(m, params, csv_rows, identity, smoke=True)
         csv_rows.extend([
             ("serving/smoke_sustained_tps", f"{r['useful'] / r['dt']:.1f}",
              f"{r['useful']} tokens, {r['steps']} unified dispatches"),
@@ -1348,7 +1560,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
         ])
         return {"token_identical": identical, "spec": spec, "tree": tree,
                 "parallel": par, "padding": pack, "sharded": sharded,
-                "disagg": disagg, "awq": awq, "slo": slo,
+                "disagg": disagg, "awq": awq, "slo": slo, "router": router,
                 "identity_sections": identity, **kv, **prefix}
 
     workload = make_workload(cfg)
@@ -1369,6 +1581,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
     disagg = run_disagg(csv_rows, identity)
     awq = run_awq(m, params, csv_rows, identity)
     slo = run_slo(m, params, csv_rows, identity)
+    router = run_router(m, params, csv_rows, identity)
 
     s_tps, c_tps = su / sdt, cu / cdt
     rows = [
@@ -1398,6 +1611,7 @@ def run(csv_rows: list, smoke: bool = False) -> dict:
             "token_identical": identical, "spec": spec, "tree": tree,
             "parallel": par, "padding": pack,
             "sharded": sharded, "disagg": disagg, "awq": awq, "slo": slo,
+            "router": router,
             "identity_sections": identity, **convoy, **kv, **prefix}
 
 
@@ -1437,6 +1651,7 @@ if __name__ == "__main__":
         "identity_sections": out.get("identity_sections", {}),
         "awq": {"weight_bytes": out["awq"]["weight_bytes"],
                 "grid": out["awq"]["grid"]},
+        "replica_topology": out["router"]["topology"],
     }
     try:
         history = json.loads(hist_path.read_text())
@@ -1523,6 +1738,15 @@ if __name__ == "__main__":
     dg = out["disagg"]
     assert dg["handoffs"] >= 1 and dg["wire_bytes"] > 0
     assert dg["convoy_handoffs"] >= 1 and dg["direct"] >= 1
+    # fleet routing: affinity placement must land clustered requests on
+    # their warm replica — strictly more prefill tokens skipped than the
+    # seeded-random fleet on the same burst — and the mid-flight
+    # drain_replica must deliver every stream exactly once, byte-equal
+    # to bare-engine references (zero loss, zero duplication)
+    rt = out["router"]
+    assert rt["affinity"]["skipped"] > rt["random"]["skipped"]
+    assert rt["drain"]["lost"] == 0 and rt["drain"]["duplicated"] == 0
+    assert rt["drain"]["identical"]
     if not args.smoke:
         # the headline claims: sharing saves FLOPs (not just memory),
         # TTFT p95 beats the one-shot baseline on the shared-prefix
@@ -1542,3 +1766,7 @@ if __name__ == "__main__":
         # convoy section.
         assert out["disagg"]["stall"]["disagg"] \
             < out["disagg"]["stall"]["unified"]
+        # routing's headline: the skipped prefill work shows up as
+        # sustained throughput at full scale (smoke bursts are too
+        # short for the wall clock to resolve it reliably on CPU)
+        assert rt["affinity"]["tps"] > rt["random"]["tps"]

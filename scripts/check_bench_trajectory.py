@@ -17,6 +17,16 @@ when the newest run regresses against the previous one:
     True→missing flip is a hard fail at any tolerance, because it means
     an asserted equivalence was lost or silently stopped running.
 
+Identity keys present in the newest record but absent from the previous
+one are **new sections** (a PR added a gate), reported informationally
+and never failed: the gate compares what both records know about, and
+growth is not a regression.
+
+After the pairwise gate the script prints a per-metric **throughput
+trajectory table** across ALL stored smoke records (newest last), so a
+slow multi-PR drift is visible even when every adjacent pair stayed
+inside tolerance.
+
 With fewer than two smoke records the gate warns and exits 0 — a fresh
 clone (or a just-initialised history) must not be red. Each record is
 stamped with its git commit and jax version by ``bench_serving.py``, so
@@ -83,6 +93,43 @@ def compare(prev, last, tolerance):
     return bad
 
 
+def new_sections(prev, last):
+    """Identity keys the newest record added (informational, never a
+    failure): new gated sections and new ``*token_identity*`` metrics."""
+    added = sorted(set(last.get("identity_sections", {}))
+                   - set(prev.get("identity_sections", {})))
+    added += sorted(k for k in last.get("metrics", {})
+                    if IDENTITY_HINT in k
+                    and k not in prev.get("metrics", {}))
+    return added
+
+
+def trajectory_table(records):
+    """Per-metric throughput table across ALL smoke records, oldest to
+    newest ('-' where a record predates the metric). Returns the printed
+    lines so tests can assert on them."""
+    names = sorted({n for r in records for n in r.get("metrics", {})
+                    if _is_throughput(n)})
+    if not names:
+        return []
+    heads = [str(r.get("git_commit", "unknown"))[:8] for r in records]
+    width = max(len(n) for n in names)
+    lines = ["TRAJECTORY-TABLE: throughput across "
+             f"{len(records)} smoke record(s) (oldest -> newest)",
+             "  " + " " * width + "  " + "  ".join(f"{h:>10}"
+                                                   for h in heads)]
+    for name in names:
+        cells = []
+        for r in records:
+            v = _numeric(r.get("metrics", {}).get(name))
+            cells.append("-" if v is None else f"{v:.1f}")
+        lines.append(f"  {name:<{width}}  "
+                     + "  ".join(f"{c:>10}" for c in cells))
+    for ln in lines:
+        print(ln)
+    return lines
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="compare the two most recent smoke bench records")
@@ -115,8 +162,13 @@ def main(argv=None):
     prev, last = smoke[-2], smoke[-1]
     bad = compare(prev, last, tol)
     tag = f"{_stamp(prev)} vs {_stamp(last)}"
+    added = new_sections(prev, last)
+    if added:
+        print(f"TRAJECTORY: new identity section(s) in latest record "
+              f"(informational): {', '.join(added)}")
     for b in bad:
         print(f"TRAJECTORY: {b}")
+    trajectory_table(smoke)
     if bad:
         print(f"TRAJECTORY: FAILED ({len(bad)} regressions, {tag})")
         return 1

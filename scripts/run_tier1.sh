@@ -104,7 +104,10 @@ fi
 
 # --- serving smoke gate: exercise the chunked serving path end-to-end
 # (engine + scheduler + pager + kernels fallback) through the benchmark's
-# reduced mode; asserts token identity and prefix-FLOP accounting
+# reduced mode; asserts token identity, prefix-FLOP accounting, and the
+# multi-replica router section (registered identity key router_vs_single:
+# a 1-replica fleet must stream byte-identical to the bare engine, and
+# affinity placement must out-skip random on the clustered burst)
 bench_rc=0
 if timeout "${TIER1_BENCH_TIMEOUT:-600}" \
         python benchmarks/bench_serving.py --smoke \
@@ -134,7 +137,7 @@ if not (isinstance(hist, list) and hist):
     sys.exit(1)
 rec = hist[-1]
 need = ("schema", "timestamp", "smoke", "metrics", "identity_sections",
-        "awq", "git_commit", "jax_version")
+        "awq", "git_commit", "jax_version", "replica_topology")
 missing = [k for k in need if k not in rec]
 if missing:
     print(f"BENCH-HISTORY: last record missing keys {missing}")

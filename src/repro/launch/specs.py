@@ -7,6 +7,7 @@ lets the dry-run lower+compile 9B-param models on a CPU container
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -105,3 +106,76 @@ def decode_token_specs(mesh: Mesh, batch: int) -> tuple:
     tok = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=sh)
     pos = jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=sh)
     return tok, pos
+
+
+# ---------------------------------------------------------------------------
+# Serving fleet specs (k8s-style declarative deployment description)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaSpec:
+    """One serving replica, declaratively.
+
+    ``mesh_axis`` is the replica's tensor-parallel ``model``-axis width
+    (1 = unsharded; the device pool must hold ``mesh_axis`` devices).
+    ``disagg=True`` serves the replica as a `DisaggController`
+    prefill/decode pair with per-side mesh widths instead of one
+    `GenerationEngine`. ``engine_kwargs`` forward verbatim to the engine
+    constructor(s) — shape, KV quant, speculation, preemption knobs.
+    """
+    mesh_axis: int = 1
+    disagg: bool = False
+    prefill_mesh_axis: int = 1
+    decode_mesh_axis: int = 1
+    engine_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def build(self, model, params, **overrides):
+        """Construct the replica this spec describes."""
+        from repro.distributed import serving_mesh
+        from repro.serving import DisaggController, GenerationEngine
+        kw = {**self.engine_kwargs, **overrides}
+        if self.disagg:
+            return DisaggController(
+                model, params,
+                prefill_mesh=(serving_mesh(self.prefill_mesh_axis)
+                              if self.prefill_mesh_axis > 1 else None),
+                decode_mesh=(serving_mesh(self.decode_mesh_axis)
+                             if self.decode_mesh_axis > 1 else None),
+                **kw)
+        mesh = serving_mesh(self.mesh_axis) if self.mesh_axis > 1 else None
+        return GenerationEngine(model, params, mesh=mesh, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """A whole serving fleet, declaratively: N replicas of a
+    `ReplicaSpec` behind a `serving.Router`.
+
+    The analog of a k8s Deployment + Service: ``replicas`` is the scale,
+    ``replica`` the pod template, ``drain_timeout_s`` bounds how long
+    `drain_replica` may step the fleet before giving up (elastic
+    scale-down), and the placement knobs configure the router's scoring
+    (see `serving.router.Router`). `build` materializes the fleet;
+    `repro.launch.serve --replicas N` and `examples/serve_fleet.py`
+    drive it.
+    """
+    replicas: int = 1
+    replica: ReplicaSpec = dataclasses.field(default_factory=ReplicaSpec)
+    drain_timeout_s: float = 30.0
+    placement: str = "affinity"
+    affinity_threshold: int = 1
+    warmup: bool = False
+
+    def build(self, model, params, **overrides):
+        """Materialize the fleet: build every replica, wrap the router,
+        optionally precompile each replica's dispatch family."""
+        from repro.serving import Router
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        fleet = [self.replica.build(model, params, **overrides)
+                 for _ in range(self.replicas)]
+        router = Router(fleet, placement=self.placement,
+                        affinity_threshold=self.affinity_threshold)
+        if self.warmup:
+            router.warmup()
+        return router

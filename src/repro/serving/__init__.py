@@ -2,6 +2,8 @@ from repro.serving.disagg import (  # noqa: F401
     DecodeEngine, DisaggController, DisaggStats, KVHandoff, PrefillEngine)
 from repro.serving.engine import (  # noqa: F401
     EngineStats, GenerationEngine, SamplerConfig, sample, sample_batched)
+from repro.serving.router import (  # noqa: F401
+    Router, RouterStats)
 from repro.serving.kv_pager import (  # noqa: F401
     HandoffRecord, KVPager, PageAllocationError, PagerConfig, PagerStats,
     SpillRecord, commit_prefill)

@@ -405,6 +405,14 @@ class DisaggController:
         return (self.prefill.engine.unpin_prefix(prefix_id)
                 + self.decode.engine.unpin_prefix(prefix_id))
 
+    def prefix_reuse_pages(self, tokens, prefix_id) -> int:
+        """Router affinity signal: the best prefix reuse either side
+        offers (a handoff aliases decode-resident pages; a direct-routed
+        request aliases whichever pool it lands in)."""
+        return max(
+            self.prefill.engine.prefix_reuse_pages(tokens, prefix_id),
+            self.decode.engine.prefix_reuse_pages(tokens, prefix_id))
+
     def stats(self) -> DisaggStats:
         return self.stats_
 

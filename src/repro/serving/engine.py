@@ -130,6 +130,13 @@ class EngineStats:
     # amortized over spec-accepted tokens per row when speculating.
     weight_bytes: int
     weight_bytes_per_token: float
+    # load snapshot (cheap, host-only): what a fleet router needs to score
+    # this engine as a placement target without touching scheduler/pager
+    # internals. `queue_depth` counts requests waiting for a slot (queued
+    # + preempted/parked); `admission_headroom` is the free pages an
+    # admission can still draw (free minus standing reservations).
+    queue_depth: int = 0
+    admission_headroom: int = 0
 
 
 def _tree_walk_greedy(g, tokens, parents, n_draft, depth):
@@ -1470,8 +1477,9 @@ class GenerationEngine:
         fixed_total = valid + st.padded_positions_fixed
         model_axis = 1 if self._mesh is None \
             else int(self._mesh.shape.get("model", 1))
+        pager_stats = self._scheduler.pager.stats()
         return EngineStats(
-            pager=self._scheduler.pager.stats(),
+            pager=pager_stats,
             dispatches=st.decode_steps,
             prefill_tokens=st.prefill_tokens,
             prefill_tokens_skipped=st.prefill_tokens_skipped,
@@ -1491,7 +1499,7 @@ class GenerationEngine:
             restores=st.restores,
             spilled_pages=st.spilled_pages,
             restored_pages=st.restored_pages,
-            pages_spilled_now=self._scheduler.pager.stats().pages_spilled,
+            pages_spilled_now=pager_stats.pages_spilled,
             restore_ms_mean=(st.restore_time_s * 1e3
                              / max(st.restores, 1)),
             model_axis=model_axis,
@@ -1500,15 +1508,39 @@ class GenerationEngine:
             kv_bytes_per_token=self.paged_kv_bytes_per_token(),
             weight_bytes=self.weight_stream_bytes(),
             weight_bytes_per_token=self.weight_bytes_per_token(
-                st.spec_tokens_per_row))
+                st.spec_tokens_per_row),
+            queue_depth=(len(self._scheduler.queue)
+                         + len(self._scheduler.preempted)),
+            admission_headroom=max(
+                0, pager_stats.pages_free - pager_stats.pages_reserved))
 
     def reset_stats(self) -> None:
         """Zero the cumulative counters behind `stats()` (occupancy and
         the adaptive ``spec_k`` state are live state, not counters, and
         are untouched) — benchmarks call this between warmup and the
-        timed run."""
+        timed run.
+
+        Resets **in place** via `SchedulerStats.zero()`: the stats object
+        keeps its identity (held references stay live) and any field
+        without a declared default — e.g. one a subclass binds at
+        construction — survives, where rebuilding via ``type(stats)()``
+        would raise or silently drop it.
+        """
         if self._scheduler is not None:
-            self._scheduler.stats = type(self._scheduler.stats)()
+            self._scheduler.stats.zero()
+
+    def prefix_reuse_pages(self, tokens, prefix_id) -> int:
+        """Exact count of already-resident KV pages a request with this
+        prompt + ``prefix_id`` would alias instead of recomputing.
+
+        This is the fleet router's affinity signal: the prefix index is
+        content-addressed, so the count is exact — not an estimate. A
+        fresh engine (serving never initialized) holds no pages and
+        reports 0 without allocating anything.
+        """
+        if prefix_id is None or self._scheduler is None:
+            return 0
+        return len(self._scheduler.pager.match_prefix(tokens, prefix_id))
 
     # --------------------------------------------------- capacity accounting
     def paged_kv_page_bytes(self) -> int:

@@ -282,6 +282,26 @@ class SchedulerStats:
     restore_time_s: float = 0.0   # wall time inside restore (pager +
     #                               device scatter), for restore latency
 
+    def zero(self) -> None:
+        """Reset every declared counter to its default, **in place**.
+
+        This is the reset `GenerationEngine.reset_stats()` uses. Resetting
+        in place (rather than rebuilding via ``type(self)()``) keeps two
+        guarantees the rebuild silently broke:
+
+          * the object's identity survives — anything holding a reference
+            to the stats snapshot keeps seeing the live counters;
+          * fields without a default (e.g. added by a subclass that binds
+            live state at construction) are left untouched instead of
+            crashing the reset or being dropped to a stale default —
+            only counters with a declared default/default_factory reset.
+        """
+        for f in dataclasses.fields(self):
+            if f.default is not dataclasses.MISSING:
+                setattr(self, f.name, f.default)
+            elif f.default_factory is not dataclasses.MISSING:
+                setattr(self, f.name, f.default_factory())
+
     @property
     def acceptance_rate(self) -> float:
         return self.accepted_tokens / max(self.draft_tokens, 1)
